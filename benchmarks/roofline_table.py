@@ -1,0 +1,64 @@
+"""Framework roofline table: aggregates the dry-run JSONs into the
+EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(results_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows, mesh: str = "single") -> str:
+    hdr = ("| arch | shape | status | HBM/dev | compute_s | memory_s | "
+           "collective_s | dominant | useful FLOPs |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | skipped "
+                       f"({r['reason'][:40]}) | – | – | – | – | – | – |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | – | – | – | "
+                       f"– | – | – |")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]["hbm_per_device_bytes"] / 1e9
+        ur = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {mem:.1f} GB | "
+            f"{ro['compute_s']:.4f} | {ro['memory_s']:.4f} | "
+            f"{ro['collective_s']:.4f} | {ro['dominant']} | "
+            f"{ur:.2f} |" if ur else
+            f"| {r['arch']} | {r['shape']} | ok | {mem:.1f} GB | "
+            f"{ro['compute_s']:.4f} | {ro['memory_s']:.4f} | "
+            f"{ro['collective_s']:.4f} | {ro['dominant']} | – |")
+    return "\n".join(out)
+
+
+def run(results_dir: str = "results/dryrun"):
+    rows = load(results_dir)
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    sk = sum(1 for r in rows if r.get("status") == "skipped")
+    err = sum(1 for r in rows if r.get("status") not in ("ok", "skipped"))
+    print(fmt_table(rows, "single"))
+    print(f"\n# cells: {ok} ok / {sk} skipped / {err} error")
+    return {"name": "roofline_table", "us_per_call": 0.0,
+            "derived": f"{ok} ok/{sk} skipped/{err} err", "ok": err == 0}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    args = ap.parse_args()
+    run(args.results)

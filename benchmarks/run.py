@@ -1,0 +1,80 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (reduced CPU-scale defaults;
+each figure module has CLI flags for the full-scale sweeps).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import io
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="minimal sizes (CI smoke)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="stream per-figure detail output")
+    args = ap.parse_args()
+
+    from benchmarks import (fig09_training_curve, fig10_dgro_vs_ga,
+                            fig11_ring_selection, fig12_ring_ablation,
+                            fig13_kring_compare, fig14_parallel,
+                            roofline_table)
+
+    fast = args.fast
+    jobs = [
+        ("fig09", lambda: fig09_training_curve.run(
+            n=10 if fast else 14, epochs=16 if fast else 120)),
+        ("fig10", lambda: fig10_dgro_vs_ga.run(
+            n=10 if fast else 14, epochs=16 if fast else 50,
+            ga_budget=200 if fast else 1000)),
+        ("fig11-uniform", lambda: fig11_ring_selection.run(
+            "uniform", (30, 60) if fast else (50, 100, 200))),
+        ("fig11-gaussian", lambda: fig11_ring_selection.run(
+            "gaussian", (30, 60) if fast else (50, 100, 200))),
+        ("fig15-fabric", lambda: fig11_ring_selection.run(
+            "fabric", (30, 60) if fast else (50, 100, 200))),
+        ("fig15-bitnode", lambda: fig11_ring_selection.run(
+            "bitnode", (30, 60) if fast else (50, 100, 200))),
+        ("fig12", lambda: fig12_ring_ablation.run(
+            sizes=(30, 60) if fast else (50, 100, 200))),
+        ("fig13", lambda: fig13_kring_compare.run(
+            "uniform", (30, 60) if fast else (50, 100, 200),
+            ga_budget=100 if fast else 300)),
+        ("fig17-bitnode", lambda: fig13_kring_compare.run(
+            "bitnode", (30, 60) if fast else (50, 100, 200),
+            ga_budget=100 if fast else 300)),
+        ("fig14", lambda: fig14_parallel.run(
+            "uniform", 64 if fast else 256)),
+        ("fig18-bitnode", lambda: fig14_parallel.run(
+            "bitnode", 64 if fast else 256)),
+        ("roofline", roofline_table.run),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in jobs:
+        buf = io.StringIO()
+        try:
+            if args.verbose:
+                res = fn()
+            else:
+                with contextlib.redirect_stdout(buf):
+                    res = fn()
+            print(f"{res['name']},{res['us_per_call']:.1f},{res['derived']}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR {e!r}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

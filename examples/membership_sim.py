@@ -1,0 +1,54 @@
+"""Membership-plane simulation: DGRO ring vs random ring for failure
+detection and dissemination, plus straggler demotion and elastic rescale.
+
+    PYTHONPATH=src python examples/membership_sim.py
+"""
+import numpy as np
+
+from repro.core.construction import nearest_ring, random_ring
+from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro.core.topology import make_latency
+from repro.membership.elastic import HostState, plan_rescale, update_ewma
+from repro.membership.gossip import disseminate, simulate_failure_detection
+
+
+def main():
+    n = 96
+    w = make_latency("bitnode", n, seed=1)
+    rng = np.random.default_rng(0)
+
+    overlays = {
+        "random ring (Chord-style)": adjacency_from_rings(
+            w, [random_ring(rng, n), random_ring(rng, n)]),
+        "DGRO ring (nearest+random)": adjacency_from_rings(
+            w, [nearest_ring(w, 0), random_ring(rng, n)]),
+    }
+    print(f"== membership plane over {n} geo-distributed hosts ==")
+    for name, adj in overlays.items():
+        d = diameter_scipy(adj)
+        t_diss = np.mean([disseminate(adj, w, s, seed=s)[0] for s in range(6)])
+        det = simulate_failure_detection(adj, w, failed=7)
+        print(f"{name:28s} diameter={d:7.1f}ms  dissemination={t_diss:7.1f}ms  "
+              f"failure: suspect@{det.t_first_suspect:.0f}ms "
+              f"everyone-knows@{det.t_all_know:.0f}ms")
+
+    # --- straggler + elastic rescale ---
+    print("\n== elastic rescale after failure + straggler demotion ==")
+    hosts = [HostState(i) for i in range(32)]
+    hosts[5].alive = False                       # crashed
+    for _ in range(20):
+        update_ewma(hosts[11], 250.0)            # persistent straggler
+        for h in hosts:
+            if h.host_id != 11 and h.alive:
+                update_ewma(h, np.random.default_rng(h.host_id).normal(10, 1))
+    plan = plan_rescale(make_latency("fabric", 32, seed=3), hosts,
+                        model_hosts=4, old_world=32)
+    print(f"survivors={len(plan.hosts)} mesh(pods,data,model)={plan.mesh_shape} "
+          f"ring={plan.ring_kind} rho={plan.rho:.2f}")
+    print(f"step-time factor ~{plan.expected_step_time_factor:.2f}x; "
+          f"shard remap sample: {dict(list(plan.shard_remap.items())[:4])}")
+    assert 5 not in plan.hosts and 11 not in plan.hosts
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""DGRO core: the paper's contribution (diameter-guided ring optimization).
+
+Submodules:
+  topology      — the four latency distributions of §VII-A
+  diameter      — min-plus APSP (JAX/Pallas) + scipy oracle, largest-CC rule
+  construction  — Algorithm 1 ring constructors (random/nearest/greedy/K-ring)
+  embedding     — Eqns 2-4 graph embedding + Q-head (structure2vec style)
+  qlearning     — Algorithm 2 DQN with replay (episodes on host, math jit'd)
+  selection     — Algorithm 3 gossip latency measurement + rho ring selection
+  parallel      — Algorithm 4 partitioned construction (host + shard_map)
+  ga            — genetic-algorithm and random-search baselines (§VII-A.2)
+  protocols     — Chord / RAPID / Perigee baseline overlays (§V-A)
+"""
+from . import construction, diameter, ga, protocols, selection, topology  # noqa: F401
+
+# embedding/qlearning/parallel import jax-heavy deps; import lazily where used.

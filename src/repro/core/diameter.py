@@ -1,0 +1,137 @@
+"""Diameter / APSP primitives.
+
+Two implementations, cross-validated in tests:
+
+* ``apsp`` / ``diameter``: jit-able JAX min-plus matrix-squaring APSP
+  (O(N^3 log N)).  Used inside the Q-learning reward (small N, on-device) and
+  on TPU, where the inner min-plus step is the Pallas kernel in
+  ``repro.kernels.minplus`` (CPU falls back to the jnp oracle automatically).
+* ``diameter_scipy``: host-side Dijkstra oracle (scipy csgraph) for large-N
+  benchmark sweeps — the paper itself uses NetworkX; scipy is ~100x faster
+  and agrees exactly (see tests/test_diameter.py).
+
+Disconnected graphs follow the paper (§IV-C): "the diameter of the largest
+connected component is adopted".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(1e9)  # finite "infinity": avoids inf-inf NaN in min-plus
+
+__all__ = [
+    "INF",
+    "adjacency_from_edges",
+    "ring_edges",
+    "adjacency_from_rings",
+    "minplus",
+    "apsp",
+    "diameter",
+    "diameter_of_rings",
+    "diameter_scipy",
+]
+
+
+# ---------------------------------------------------------------------------
+# graph assembly
+# ---------------------------------------------------------------------------
+
+def ring_edges(perm: np.ndarray) -> np.ndarray:
+    """Edges of the ring perm[0] -> perm[1] -> ... -> perm[-1] -> perm[0]."""
+    perm = np.asarray(perm)
+    return np.stack([perm, np.roll(perm, -1)], axis=1)
+
+
+def adjacency_from_edges(w: np.ndarray, edges: Iterable[Sequence[int]]) -> np.ndarray:
+    """Weighted adjacency with INF on non-edges, 0 diagonal (undirected)."""
+    n = w.shape[0]
+    d = np.full((n, n), float(INF), dtype=np.float32)
+    np.fill_diagonal(d, 0.0)
+    for u, v in edges:
+        d[u, v] = min(d[u, v], w[u, v])
+        d[v, u] = min(d[v, u], w[v, u])
+    return d
+
+
+def adjacency_from_rings(w: np.ndarray, perms: Sequence[np.ndarray]) -> np.ndarray:
+    """Union of K rings as a weighted adjacency matrix."""
+    edges = np.concatenate([ring_edges(p) for p in perms], axis=0)
+    return adjacency_from_edges(w, edges)
+
+
+# ---------------------------------------------------------------------------
+# JAX min-plus APSP
+# ---------------------------------------------------------------------------
+
+def _minplus_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(A ⊗ B)[i,j] = min_k A[i,k] + B[k,j] — the tropical-semiring matmul."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def minplus(a: jnp.ndarray, b: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
+    """Min-plus product; Pallas tiled kernel on TPU when requested."""
+    if use_kernel:
+        from repro.kernels.minplus import ops as minplus_ops
+
+        return minplus_ops.minplus(a, b)
+    return _minplus_jnp(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def apsp(adj: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
+    """All-pairs shortest paths by repeated min-plus squaring.
+
+    ``adj`` is a weighted adjacency matrix (0 diag, INF non-edges).  After
+    ceil(log2(N-1)) squarings D contains shortest-path distances.
+    """
+    n = adj.shape[0]
+    n_iters = max(1, int(np.ceil(np.log2(max(n - 1, 2)))))
+
+    def body(_, d):
+        return minplus(d, d, use_kernel=use_kernel)
+
+    return jax.lax.fori_loop(0, n_iters, body, adj)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def diameter(adj: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
+    """Weighted diameter of the largest connected component (paper §IV-C)."""
+    d = apsp(adj, use_kernel=use_kernel)
+    finite = d < INF / 2
+    sizes = jnp.sum(finite, axis=1)
+    anchor = jnp.argmax(sizes)          # a node in the largest component
+    mask = finite[anchor]
+    pair = mask[:, None] & mask[None, :]
+    return jnp.max(jnp.where(pair, d, 0.0))
+
+
+def diameter_of_rings(w: np.ndarray, perms: Sequence[np.ndarray]) -> float:
+    """Diameter of the union-of-rings overlay, via the JAX path."""
+    return float(diameter(jnp.asarray(adjacency_from_rings(w, perms))))
+
+
+# ---------------------------------------------------------------------------
+# scipy oracle (host)
+# ---------------------------------------------------------------------------
+
+def diameter_scipy(adj: np.ndarray) -> float:
+    """Host-side oracle: Dijkstra over the sparse overlay."""
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import connected_components, dijkstra
+
+    adj = np.asarray(adj, dtype=np.float64)
+    finite = (adj < float(INF) / 2) & (adj > 0)
+    sp = csr_matrix(np.where(finite, adj, 0.0))
+    ncomp, labels = connected_components(sp, directed=False)
+    if ncomp > 1:
+        largest = np.bincount(labels).argmax()
+        keep = np.flatnonzero(labels == largest)
+        sp = sp[np.ix_(keep, keep)]
+    dist = dijkstra(sp, directed=False)
+    return float(dist.max())

@@ -1,0 +1,113 @@
+"""Graph embedding + Q-head (paper §IV-D, Eqns 2-4, Fig. 4).
+
+structure2vec-style embedding over (complete graph W, partial solution A_t):
+
+    mu_v^{t+1} = relu( theta1 * x_v
+                     + theta2 @ sum_{u in N(v)} mu_u
+                     + theta3 @ sum_{u in N(v)} relu(theta4 * w(v,u)) )   (2)
+
+    x(u) = [ w(v_t,u), theta5 @ sum_v mu_v, theta6 @ mu_{v_t}, theta7 @ mu_u ]  (3)
+
+    Qhat(S_t, u) = theta10^T relu(theta9 relu(theta8 relu(x)))            (4)
+
+Per Fig. 4 every neighbourhood sum is a matmul with the partial-solution
+adjacency A_t, so the whole forward is MXU-shaped.  The paper types theta1 as
+a scalar; we follow structure2vec (Dai et al. 2017, the paper's [52]) and use
+theta1 in R^p so the degree feature spans the embedding space.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QParams", "init_qparams", "embed", "q_values", "q_values_batch"]
+
+
+class QParams(NamedTuple):
+    theta1: jnp.ndarray   # (p,)     degree feature
+    theta2: jnp.ndarray   # (p, p)   neighbour-embedding aggregation
+    theta3: jnp.ndarray   # (p, p)   neighbour-latency aggregation
+    theta4: jnp.ndarray   # (p,)     scalar latency -> R^p
+    theta5: jnp.ndarray   # (p, p)   pooled graph embedding
+    theta6: jnp.ndarray   # (p, p)   source-node embedding
+    theta7: jnp.ndarray   # (p, p)   candidate-node embedding
+    theta8: jnp.ndarray   # (h, 3p+1) MLP in
+    theta9: jnp.ndarray   # (h, h)    MLP hidden
+    theta10: jnp.ndarray  # (h,)      MLP out
+
+
+def init_qparams(key: jax.Array, p: int = 16, h: int = 64) -> QParams:
+    ks = jax.random.split(key, 10)
+
+    def glorot(k, shape):
+        fan = sum(shape) if len(shape) > 1 else shape[0] + 1
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan)
+
+    return QParams(
+        theta1=glorot(ks[0], (p,)),
+        theta2=glorot(ks[1], (p, p)),
+        theta3=glorot(ks[2], (p, p)),
+        theta4=glorot(ks[3], (p,)),
+        theta5=glorot(ks[4], (p, p)),
+        theta6=glorot(ks[5], (p, p)),
+        theta7=glorot(ks[6], (p, p)),
+        theta8=glorot(ks[7], (h, 3 * p + 1)),
+        theta9=glorot(ks[8], (h, h)),
+        theta10=glorot(ks[9], (h,)),
+    )
+
+
+def embed(params: QParams, w: jnp.ndarray, adj: jnp.ndarray, n_rounds: int = 3) -> jnp.ndarray:
+    """T rounds of Eqn. (2).  ``adj``: {0,1} partial-solution adjacency (N,N).
+
+    Returns (N, p) node embeddings.  Both aggregation terms are matmuls
+    (Fig. 4): `adj @ mu` and a masked reduction of relu(W x theta4).
+    """
+    n = w.shape[0]
+    p = params.theta1.shape[0]
+    deg = jnp.sum(adj, axis=1)                                   # x_v
+    # second Fig.4 row: relu(theta4 * w(v,u)) summed over neighbours
+    lat_feat = jnp.einsum("vu,vup->vp", adj, jax.nn.relu(w[:, :, None] * params.theta4))
+    lat_term = lat_feat @ params.theta3.T                        # (N, p)
+    deg_term = deg[:, None] * params.theta1[None, :]             # (N, p)
+
+    def one_round(mu, _):
+        agg = adj @ mu                                           # (N, p) first Fig.4 row
+        mu = jax.nn.relu(deg_term + agg @ params.theta2.T + lat_term)
+        return mu, None
+
+    mu0 = jnp.zeros((n, p), jnp.float32)
+    mu, _ = jax.lax.scan(one_round, mu0, None, length=n_rounds)
+    return mu
+
+
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def q_values(
+    params: QParams,
+    w: jnp.ndarray,
+    adj: jnp.ndarray,
+    v_t: jnp.ndarray,
+    n_rounds: int = 3,
+) -> jnp.ndarray:
+    """Q(S_t, u) for every candidate u (Eqns 3-4).  Returns (N,)."""
+    mu = embed(params, w, adj, n_rounds)
+    pooled = jnp.sum(mu, axis=0) @ params.theta5.T               # (p,)
+    src = mu[v_t] @ params.theta6.T                              # (p,)
+    tgt = mu @ params.theta7.T                                   # (N, p)
+    n = w.shape[0]
+    x = jnp.concatenate(
+        [w[v_t][:, None], jnp.broadcast_to(pooled, (n, pooled.shape[0])),
+         jnp.broadcast_to(src, (n, src.shape[0])), tgt],
+        axis=1,
+    )                                                            # (N, 3p+1)
+    hidden = jax.nn.relu(jax.nn.relu(x) @ params.theta8.T)
+    hidden = jax.nn.relu(hidden @ params.theta9.T)
+    return hidden @ params.theta10                               # (N,)
+
+
+q_values_batch = jax.jit(
+    jax.vmap(q_values, in_axes=(None, 0, 0, 0)), static_argnames=()
+)

@@ -1,0 +1,98 @@
+"""Baseline P2P overlay topologies the paper compares against (§V-A, §VII).
+
+* Chord   — identifier ring from a consistent hash (random permutation) plus
+            finger edges to the 2^j-th successor (Stoica et al. 2001).
+* RAPID   — K random rings from K consistent hash functions (Suresh et al.
+            2018); expander-like but latency-oblivious.
+* Perigee — latency-aware neighbour selection (Mao et al. 2020): each node
+            keeps its d lowest-latency neighbours.  The paper always combines
+            Perigee with a ring "otherwise no connectivity guarantee".
+
+Each builder returns ``(adjacency, rings)`` where ``adjacency`` is the
+weighted overlay (INF on non-edges) and ``rings`` the list of ring
+permutations it embeds (the part DGRO's selection is allowed to swap).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .construction import default_num_rings, nearest_ring, random_ring
+from .diameter import adjacency_from_edges, adjacency_from_rings, ring_edges
+
+__all__ = ["chord", "rapid", "perigee", "with_replaced_rings"]
+
+Overlay = Tuple[np.ndarray, List[np.ndarray]]
+
+
+def chord(w: np.ndarray, rng: np.random.Generator) -> Overlay:
+    """Chord: hash-ordered ring + fingers at power-of-two offsets."""
+    n = w.shape[0]
+    perm = random_ring(rng, n)  # identifier-space order
+    edges = list(ring_edges(perm))
+    # finger j of the node at ring position i points 2^j positions ahead
+    j = 1
+    while (1 << j) < n:
+        off = 1 << j
+        for i in range(n):
+            edges.append((perm[i], perm[(i + off) % n]))
+        j += 1
+    return adjacency_from_edges(w, edges), [perm]
+
+
+def rapid(w: np.ndarray, rng: np.random.Generator, k: int | None = None) -> Overlay:
+    """RAPID: K independent consistent-hash (random) rings."""
+    n = w.shape[0]
+    k = k or default_num_rings(n)
+    rings = [random_ring(rng, n) for _ in range(k)]
+    return adjacency_from_rings(w, rings), rings
+
+
+def perigee(
+    w: np.ndarray,
+    rng: np.random.Generator,
+    degree: int | None = None,
+    ring_kind: str = "random",
+) -> Overlay:
+    """Perigee: per-node d nearest (lowest-latency) neighbours + one ring.
+
+    ``ring_kind`` in {"random", "nearest"} selects the connectivity ring —
+    the knob DGRO's §V selection turns (Figs. 7/11/15).
+    """
+    n = w.shape[0]
+    degree = degree or default_num_rings(n)
+    edges = []
+    for u in range(n):
+        order = np.argsort(w[u])
+        nearest = [v for v in order if v != u][:degree]
+        edges.extend((u, v) for v in nearest)
+    if ring_kind == "random":
+        ring = random_ring(rng, n)
+    elif ring_kind == "nearest":
+        ring = nearest_ring(w, start=int(rng.integers(n)))
+    else:
+        raise ValueError(ring_kind)
+    edges.extend(ring_edges(ring))
+    return adjacency_from_edges(w, edges), [ring]
+
+
+def with_replaced_rings(
+    w: np.ndarray,
+    base_edges_adj: np.ndarray,
+    old_rings: List[np.ndarray],
+    new_rings: List[np.ndarray],
+) -> np.ndarray:
+    """Rebuild an overlay with some rings swapped (DGRO ring selection).
+
+    ``base_edges_adj`` must be the overlay *without* the old rings; callers
+    that only have the full overlay should rebuild from scratch instead.
+    """
+    from .diameter import INF
+
+    d = np.array(base_edges_adj, copy=True)
+    for ring in new_rings:
+        for u, v in ring_edges(ring):
+            d[u, v] = min(d[u, v], w[u, v])
+            d[v, u] = min(d[v, u], w[v, u])
+    return d

@@ -1,0 +1,250 @@
+"""Deep Q-learning for diameter-guided ring construction (paper §IV, Alg. 1-2).
+
+MDP (paper §IV-C):
+  * state  S_t = (W, A_t, v_t): latency matrix, partial-solution adjacency,
+    current end node of the ring under construction;
+  * action u: next unvisited node — edge (v_t, u) is added;
+  * reward r = D(G_t) - D(G_{t+1}) - alpha * w(v_t, u): telescopes to
+    -D(G_T) plus the latency-shaping term.
+
+Replay + epsilon-greedy exactly per Algorithm 2; epsilon schedule per
+§VII-B.1: eps = max(1 - epoch/eps_decay, 0.05).  Host drives the (cheap,
+control-flow-heavy) episode loop; the Q forward, TD update and diameter are
+jit'd JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .construction import default_num_rings
+from .diameter import INF, diameter
+from .embedding import QParams, init_qparams, q_values
+from .topology import make_latency
+
+__all__ = ["DQNConfig", "ReplayBuffer", "train_dqn", "construct_ring_dqn",
+           "dgro_topology", "TrainLog"]
+
+
+@dataclasses.dataclass
+class DQNConfig:
+    n: int = 20                     # nodes per training graph
+    k_rings: int = 2                # rings per episode
+    p: int = 16                     # embedding dim (paper: 16)
+    h: int = 64                     # Q-head hidden
+    n_rounds: int = 3               # embedding iterations T
+    lr: float = 5e-4                # paper §VII-B.1
+    gamma: float = 0.99
+    alpha: float = 0.1              # latency shaping coefficient
+    epochs: int = 300
+    eps_decay: float = 2000.0       # paper: eps = max(1 - epoch/2000, 0.05)
+    eps_min: float = 0.05
+    batch_size: int = 32            # paper: 32
+    buffer_capacity: int = 20000
+    dist: str = "uniform"
+    seed: int = 0
+    updates_per_step: int = 1
+
+
+class ReplayBuffer:
+    """Fixed-capacity ring buffer of transitions (Alg. 2 memory M)."""
+
+    def __init__(self, capacity: int, n: int):
+        self.capacity = capacity
+        self.n = n
+        self.w = np.zeros((capacity, n, n), np.float32)
+        self.adj = np.zeros((capacity, n, n), np.uint8)
+        self.v = np.zeros((capacity,), np.int32)
+        self.action = np.zeros((capacity,), np.int32)
+        self.reward = np.zeros((capacity,), np.float32)
+        self.adj_next = np.zeros((capacity, n, n), np.uint8)
+        self.v_next = np.zeros((capacity,), np.int32)
+        self.visited_next = np.zeros((capacity, n), np.uint8)
+        self.done = np.zeros((capacity,), np.uint8)
+        self.size = 0
+        self.ptr = 0
+
+    def push(self, w, adj, v, action, reward, adj_next, v_next, visited_next, done):
+        i = self.ptr
+        self.w[i] = w
+        self.adj[i] = adj
+        self.v[i] = v
+        self.action[i] = action
+        self.reward[i] = reward
+        self.adj_next[i] = adj_next
+        self.v_next[i] = v_next
+        self.visited_next[i] = visited_next
+        self.done[i] = done
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.size, size=batch)
+        return (self.w[idx], self.adj[idx], self.v[idx], self.action[idx],
+                self.reward[idx], self.adj_next[idx], self.v_next[idx],
+                self.visited_next[idx], self.done[idx])
+
+
+# ---------------------------------------------------------------------------
+# jit'd TD update
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def _td_update(params: QParams, opt_state, w, adj, v, action, reward,
+               adj_next, v_next, visited_next, done, gamma, lr,
+               n_rounds: int = 3):
+    """One SGD step on the squared TD error over a replay batch."""
+
+    def q_sa(p, w1, a1, v1, act1):
+        return q_values(p, w1, a1.astype(jnp.float32), v1, n_rounds)[act1]
+
+    def target(w1, an1, vn1, vis1, d1, r1):
+        qn = q_values(params, w1, an1.astype(jnp.float32), vn1, n_rounds)
+        qn = jnp.where(vis1.astype(bool), -jnp.inf, qn)
+        best = jnp.max(qn)
+        best = jnp.where(jnp.isfinite(best), best, 0.0)
+        return r1 + gamma * best * (1.0 - d1)
+
+    y = jax.vmap(target)(w, adj_next, v_next, visited_next,
+                         done.astype(jnp.float32), reward)
+    y = jax.lax.stop_gradient(y)
+
+    def loss_fn(p):
+        q = jax.vmap(q_sa, in_axes=(None, 0, 0, 0, 0))(p, w, adj, v, action)
+        return jnp.mean(jnp.square(y - q))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    cfg = AdamWConfig(lr=lr, b1=0.9, b2=0.999, clip_norm=5.0)
+    new_params, new_state, _ = adamw_update(cfg, grads, opt_state, params)
+    return new_params, new_state, loss
+
+
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def _greedy_q(params: QParams, w, adj, v, visited, n_rounds: int = 3):
+    q = q_values(params, w, adj.astype(jnp.float32), v, n_rounds)
+    return jnp.where(visited, -jnp.inf, q)
+
+
+_diameter_jit = jax.jit(diameter)
+
+
+# ---------------------------------------------------------------------------
+# episodes
+# ---------------------------------------------------------------------------
+
+def _run_episode(params, cfg: DQNConfig, w: np.ndarray, eps: float,
+                 rng: np.random.Generator, buffer: Optional[ReplayBuffer],
+                 opt_state=None, train: bool = True):
+    """Build k_rings rings with eps-greedy Q; optionally train per step."""
+    n = cfg.n
+    adj_w = np.full((n, n), float(INF), np.float32)   # weighted partial graph
+    np.fill_diagonal(adj_w, 0.0)
+    adj = np.zeros((n, n), np.uint8)                  # 0/1 adjacency for embed
+    prev_d = 0.0                                      # D(G_0) := 0 (empty)
+    losses = []
+    perms: List[np.ndarray] = []
+
+    for ring_i in range(cfg.k_rings):
+        start = int(rng.integers(n))
+        visited = np.zeros(n, np.uint8)
+        visited[start] = 1
+        perm = [start]
+        v = start
+        for _t in range(n):  # n-1 inner edges + closing edge
+            closing = _t == n - 1
+            if closing:
+                a = start                              # close the ring
+            elif rng.random() < eps:
+                a = int(rng.choice(np.flatnonzero(visited == 0)))
+            else:
+                q = np.asarray(_greedy_q(params, w, adj, v, visited.astype(bool),
+                                         cfg.n_rounds))
+                a = int(np.argmax(q))
+            adj_prev = adj.copy()
+            adj_w[v, a] = min(adj_w[v, a], w[v, a]); adj_w[a, v] = adj_w[v, a]
+            adj[v, a] = 1; adj[a, v] = 1
+            new_d = float(_diameter_jit(jnp.asarray(adj_w)))
+            reward = (prev_d - new_d) - cfg.alpha * float(w[v, a])
+            done = closing and ring_i == cfg.k_rings - 1
+            if buffer is not None and not closing:
+                visited_next = visited.copy(); visited_next[a] = 1
+                buffer.push(w, adj_prev, v, a, reward, adj, a, visited_next, done)
+            prev_d = new_d
+            if not closing:
+                visited[a] = 1
+                perm.append(a)
+                v = a
+            if train and buffer is not None and buffer.size >= cfg.batch_size:
+                for _ in range(cfg.updates_per_step):
+                    batch = buffer.sample(rng, cfg.batch_size)
+                    params, opt_state, loss = _td_update(
+                        params, opt_state, *[jnp.asarray(x) for x in batch],
+                        jnp.float32(cfg.gamma), jnp.float32(cfg.lr), cfg.n_rounds)
+                    losses.append(float(loss))
+        perms.append(np.asarray(perm))
+    return params, opt_state, prev_d, losses, perms
+
+
+@dataclasses.dataclass
+class TrainLog:
+    epochs: List[int]
+    train_diam: List[float]
+    test_diam: List[float]
+    loss: List[float]
+    seconds: float
+
+
+def train_dqn(cfg: DQNConfig, eval_every: int = 25,
+              eval_graphs: int = 3) -> Tuple[QParams, TrainLog]:
+    """Algorithm 2: Q-learning with experience replay."""
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_qparams(key, cfg.p, cfg.h)
+    opt_state = adamw_init(params)
+    buffer = ReplayBuffer(cfg.buffer_capacity, cfg.n)
+    test_ws = [make_latency(cfg.dist, cfg.n, seed=10_000 + i)
+               for i in range(eval_graphs)]
+    log = TrainLog([], [], [], [], 0.0)
+    t0 = time.time()
+    for epoch in range(cfg.epochs):
+        eps = max(1.0 - epoch / cfg.eps_decay, cfg.eps_min)
+        w = make_latency(cfg.dist, cfg.n, seed=cfg.seed * 77_000 + epoch)
+        params, opt_state, train_d, losses, _ = _run_episode(
+            params, cfg, w, eps, rng, buffer, opt_state, train=True)
+        if epoch % eval_every == 0 or epoch == cfg.epochs - 1:
+            test_d = float(np.mean([
+                construct_ring_dqn(params, cfg, tw, rng)[1] for tw in test_ws]))
+            log.epochs.append(epoch)
+            log.train_diam.append(train_d)
+            log.test_diam.append(test_d)
+            log.loss.append(float(np.mean(losses)) if losses else float("nan"))
+    log.seconds = time.time() - t0
+    return params, log
+
+
+def construct_ring_dqn(params: QParams, cfg: DQNConfig, w: np.ndarray,
+                       rng: np.random.Generator) -> Tuple[List[np.ndarray], float]:
+    """Greedy (eps=0) K-ring construction with the trained Q (Alg. 1)."""
+    params, _, d, _, perms = _run_episode(params, cfg, w, eps=0.0, rng=rng,
+                                          buffer=None, train=False)
+    return perms, d
+
+
+def dgro_topology(params: QParams, cfg: DQNConfig, w: np.ndarray,
+                  n_starts: int = 10, seed: int = 0) -> Tuple[List[np.ndarray], float]:
+    """Paper §VII-B.2: build n_starts K-ring topologies, keep the best."""
+    best_perms, best_d = None, float("inf")
+    for s in range(n_starts):
+        rng = np.random.default_rng(seed + s)
+        perms, d = construct_ring_dqn(params, cfg, w, rng)
+        if d < best_d:
+            best_perms, best_d = perms, d
+    return best_perms, best_d

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window, GQA-aware).
+
+Online-softmax attention over tiled KV panels — the framework's dominant
+compute hot spot for prefill/training.  TPU-native design notes:
+
+  * grid (B, Hq, Tq/bq, Tk/bk); the KV panel index is the LAST grid dim, so
+    the TPU revisiting rule keeps the (bq, d) accumulator and the (bq,)
+    running max/sum resident in VMEM scratch across panels.
+  * GQA is handled in the BlockSpec index_map — query head h reads KV head
+    h * n_kv // n_q — so KV is never materialized per-query-head in HBM
+    (a torch-style `repeat_interleave` would multiply KV HBM traffic by the
+    group size; on TPU we only re-read the same KV tile, which hits VMEM).
+  * q/k tiles are (bq, d) and (bk, d) with d padded to a lane multiple of
+    128; s = q @ k^T runs on the MXU in fp32; masks are computed from
+    absolute positions so causal+window+padding all fold into one select.
+  * fully-masked panels (beyond the causal frontier or outside the sliding
+    window) are skipped with pl.when — for long_500k-style shapes with a
+    1024-token window this skips ~Tk/window of all panels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, seq_k: int, num_kb: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+
+    # panel-level skip: entirely above the causal diagonal or left of window
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k_lo <= q_lo + bq - 1)
+    if window is not None:
+        live = live & (k_lo + bk - 1 >= q_lo - (window - 1))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_k                              # KV padding
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                      # exp(NEG_INF-m) underflow guard
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)               # fully-masked rows
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(
+    q: jnp.ndarray,                 # (B, Hq, Tq, D)
+    k: jnp.ndarray,                 # (B, Hkv, Tk, D)
+    v: jnp.ndarray,                 # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled flash attention.  Tq/Tk must be padded to bq/bk multiples and D
+    to a 128 multiple by the caller (``ops.flash_attention``).  ``seq_k`` for
+    masking is carried via static closure over the padded shape; callers pass
+    the true KV length through ops."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    assert tq % bq == 0 and tk % bk == 0 and d % 128 == 0, (q.shape, k.shape)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    num_kb = tk // bk
+    grid = (b, hq, tq // bq, num_kb)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, seq_k=tk, num_kb=num_kb)
+
+    def kv_head(h):
+        return h * hkv // hq
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki: (b_, kv_head(h), ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki: (b_, kv_head(h), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max  m_i
+            pltpu.VMEM((bq,), jnp.float32),      # running sum  l_i
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

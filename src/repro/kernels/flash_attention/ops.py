@@ -1,0 +1,95 @@
+"""jit'd public wrapper for flash attention (padding + backend dispatch).
+
+``flash_attention`` pads (Tq, Tk, D) to tile multiples, invokes the Pallas
+kernel (compiled on TPU, interpret-mode on CPU) and slices the result.  The
+model stack calls ``repro.models.layers.attention`` which dispatches between
+this kernel and the jnp oracle based on backend — the math is identical
+(validated in tests/test_kernels.py across shape/dtype/window sweeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,                 # (B, Hq, Tq, D)
+    k: jnp.ndarray,                 # (B, Hkv, Tk, D)
+    v: jnp.ndarray,                 # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    pq = (-tq) % bq
+    pk = (-tk) % bk
+    pd = (-d) % 128
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, pd)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, pd)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, pd)))
+
+    # the kernel masks kpos >= padded seq via its seq_k closure: pass true len
+    # by re-masking padded keys — zero-padded K rows yield s=0 which must be
+    # excluded, so we set seq_k to the true tk inside the kernel call.
+    out = _call_kernel(qp, kp, vp, causal=causal, window=window, scale=scale,
+                       bq=bq, bk=bk, interpret=interpret, true_tk=tk)
+    return out[:, :, :tq, :d]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret", "true_tk"))
+def _call_kernel(qp, kp, vp, *, causal, window, scale, bq, bk, interpret,
+                 true_tk):
+    import functools as ft
+
+    from jax.experimental import pallas as pl  # noqa: F401
+    from . import kernel as K
+
+    b, hq, tq, d = qp.shape
+    _, hkv, tk, _ = kp.shape
+    num_kb = tk // bk
+    grid = (b, hq, tq // bq, num_kb)
+    kern = ft.partial(K._flash_kernel, scale=scale, causal=causal,
+                      window=window, bq=bq, bk=bk, seq_k=true_tk,
+                      num_kb=num_kb)
+
+    def kv_head(h):
+        return h * hkv // hq
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki: (b_, kv_head(h), ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki: (b_, kv_head(h), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq, d), qp.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+
+
+__all__ = ["flash_attention", "attention_ref", "flash_attention_pallas"]

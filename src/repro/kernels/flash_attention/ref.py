@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for flash attention (dense softmax, fp32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,                 # (B, Hq, Tq, D)
+    k: jnp.ndarray,                 # (B, Hkv, Tk, D)
+    v: jnp.ndarray,                 # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Dense masked attention.  ``q_offset`` places the query block at
+    absolute positions [q_offset, q_offset+Tq) against KV positions
+    [0, Tk) — used for decode (Tq=1, q_offset=cache_len-1)."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kr = jnp.repeat(k, groups, axis=1)
+    vr = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+
+    qpos = q_offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: tiled min-plus (tropical) matrix product.
+
+C[i, j] = min_k A[i, k] + B[k, j]
+
+This is the inner step of the min-plus-squaring APSP used by
+``repro.core.diameter`` — the paper's diameter computation is the hot spot of
+both the Q-learning reward loop and the GA baseline.  Min-plus has no
+multiply-accumulate, so it maps to the VPU (not the MXU); the tiling is
+therefore chosen for VMEM residency and 8x128 vector-lane alignment rather
+than for MXU 128x128 systolic shape:
+
+  * grid (M/bm, N/bn, K/bk), K innermost so the output block stays resident
+    in VMEM across the K panels (revisiting rule on TPU: last grid dim is
+    sequential minor-most).
+  * each (bm, bk) x (bk, bn) panel is reduced in CHUNK=8 slabs: a
+    (bm, 8, bn) broadcast-add + min keeps the temporary under 0.5 MiB
+    (bm=bn=128) while amortizing loop overhead over full 8x128 vregs.
+  * VMEM per step: A tile 64 KiB + B tile 64 KiB + C tile 64 KiB fp32
+    (+ double buffering) — far below the ~16 MiB/core budget, leaving room
+    for the pipeline to prefetch the next K panel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 1e9
+_CHUNK = 8
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, INF)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+
+    def body(c, acc):
+        a_slab = jax.lax.dynamic_slice_in_dim(a, c * _CHUNK, _CHUNK, axis=1)
+        b_slab = jax.lax.dynamic_slice_in_dim(b, c * _CHUNK, _CHUNK, axis=0)
+        cand = a_slab[:, :, None] + b_slab[None, :, :]       # (bm, CHUNK, bn)
+        return jnp.minimum(acc, jnp.min(cand, axis=1))
+
+    o_ref[...] = jax.lax.fori_loop(0, bk // _CHUNK, body, o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def minplus_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled min-plus product.  Inputs must be fp32 with dims divisible by
+    the block sizes (``ops.minplus`` handles padding)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    assert bk % _CHUNK == 0, bk
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_minplus_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the min-plus kernel (padding + backend dispatch).
+
+On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
+interpret mode for correctness validation, and callers that need speed use
+the jnp oracle (``repro.core.diameter`` defaults to the oracle on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import INF, minplus_pallas
+from .ref import minplus_ref
+
+
+def _pad_to(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
+    m, n = x.shape
+    pm = (-m) % mult
+    pn = (-n) % mult
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def minplus(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Min-plus product with INF padding to block multiples.
+
+    Padding with +INF is semantically neutral: padded k entries contribute
+    INF + x >= INF and never win the min; padded rows/cols are sliced off.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, n = a.shape[0], b.shape[1]
+    a32 = _pad_to(a.astype(jnp.float32), block, INF)
+    b32 = _pad_to(b.astype(jnp.float32), block, INF)
+    out = minplus_pallas(a32, b32, bm=block, bn=block, bk=block,
+                         interpret=interpret)
+    return out[:m, :n]
+
+
+__all__ = ["minplus", "minplus_ref"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the min-plus kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[i, j] = min_k A[i, k] + B[k, j] (dense broadcast)."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the fused RMSNorm kernel (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_pallas
+from .ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Fused RMSNorm over the last dim; leading dims flattened to rows."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    flat = x.reshape(rows, d)
+    bm = min(256, rows)
+    pad = (-rows) % bm
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    out = rmsnorm_pallas(flat, scale, eps=eps, bm=bm, interpret=interpret)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

@@ -1,0 +1,413 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x
+# mesh) cell against the production mesh, print memory/cost analyses, and
+# derive the roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+#
+# The two lines above MUST precede any jax import (including `from repro...`):
+# jax locks the device count at first backend initialization.  Run:
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+#         --mesh both --out results/dryrun
+#
+# Each cell writes one JSON (incrementally — the sweep is resumable).
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, ArchConfig, ShapeConfig, get_arch, \
+    shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (batch_specs, cache_specs, param_specs,
+                                    state_specs, to_shardings)
+from repro.models import model as Mdl
+from repro.models.sharding import default_rules, use_rules
+from repro.roofline.analysis import (Roofline, active_param_count, model_flops,
+                                     roofline_from)
+from repro.roofline.hlo_walk import walk
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import TrainConfig, TrainState, train_step
+
+PARAM_DTYPE = jnp.bfloat16
+# bf16 moments for the 400B arch: fp32 moments do not fit a single v5e pod
+# (DESIGN.md §8 / EXPERIMENTS.md §Dry-run notes)
+BF16_MOMENT_ARCHS = {"llama4-maverick-400b-a17b"}
+# ZeRO-3 (params sharded over model x data, gathered at use): 400B bf16
+# params are 800 GB — 16-way TP alone leaves 50 GB/device resident
+ZERO3_ARCHS = {"llama4-maverick-400b-a17b"}
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    has_vision = cfg.frontend == "vision"
+    n_text = s - cfg.n_patches if has_vision else s
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sd((b, n_text), jnp.int32),
+                 "labels": sd((b, n_text), jnp.int32)}
+        if has_vision:
+            specs["vision_embeds"] = sd((b, cfg.n_patches, cfg.d_model),
+                                        PARAM_DTYPE)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sd((b, n_text), jnp.int32)}
+        if has_vision:
+            specs["vision_embeds"] = sd((b, cfg.n_patches, cfg.d_model),
+                                        PARAM_DTYPE)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sd((b, 1), jnp.int32), "pos": sd((), jnp.int32)}
+
+
+def state_shapes(cfg: ArchConfig, moment_dtype) -> TrainState:
+    def mk():
+        params = Mdl.init_params(cfg, jax.random.PRNGKey(0), PARAM_DTYPE)
+        return TrainState(params=params,
+                          opt=adamw_init(params, moment_dtype))
+    return jax.eval_shape(mk)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: Mdl.init_caches(cfg, batch, max_len, PARAM_DTYPE))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: ArchConfig, shape: ShapeConfig, mesh, data_axes,
+              grad_shardings=None, microbatches: int | None = None,
+              sharding_mode: str = "tp", ce_chunk: int = 0):
+    if sharding_mode in ("fsdp", "dp"):
+        # data_axes already includes "model" here (batch spans it)
+        from repro.models.sharding import fsdp_rules
+        rules = fsdp_rules(data_axes=tuple(a for a in data_axes
+                                           if a != "model"), mesh=mesh)
+    else:
+        rules = default_rules(data_axes=tuple(data_axes), mesh=mesh)
+    if microbatches is None:
+        # cap ~16k tokens per device per microbatch: bounds the fp32
+        # logits/CE working set (vocab/16-sharded) to a few GB at 262k vocab
+        dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+        tokens_per_dev = shape.global_batch * shape.seq_len // dsize
+        local_batch = max(1, shape.global_batch // dsize)
+        microbatches = max(1, min(tokens_per_dev // 16384, local_batch))
+        while local_batch % microbatches:
+            microbatches -= 1
+    tc = TrainConfig(optimizer=AdamWConfig(lr=3e-4, weight_decay=0.1),
+                     remat=True, microbatches=microbatches,
+                     ce_chunk=ce_chunk)
+
+    if shape.kind == "train":
+        def step(state, batch):
+            with use_rules(rules):
+                return train_step(cfg, tc, state, batch, mesh=mesh,
+                                  data_axes=tuple(data_axes),
+                                  grad_shardings=grad_shardings)
+        return step
+
+    if shape.kind == "prefill":
+        def step(params, caches, batch):
+            with use_rules(rules):
+                logits, new_caches, _aux = Mdl.forward(
+                    cfg, params, batch["tokens"], mode="prefill",
+                    caches=caches, vision_embeds=batch.get("vision_embeds"),
+                    mesh=mesh, data_axes=tuple(data_axes))
+            return logits, new_caches
+        return step
+
+    def step(params, caches, batch):   # decode / serve_step
+        with use_rules(rules):
+            logits, new_caches = Mdl.forward(
+                cfg, params, batch["tokens"], mode="decode", caches=caches,
+                pos=batch["pos"], mesh=mesh, data_axes=tuple(data_axes))
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+    return step
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             dgro_order: bool = False, sharding_mode: str = "tp",
+             cache_dtype: str = "bf16",
+             microbatches: int | None = None,
+             hlo_path: str | None = None,
+             pod_compress: bool = False,
+             ce_chunk: int = 0) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "timestamp": time.time(), "sharding_mode": sharding_mode,
+        "cache_dtype": cache_dtype, "_hlo_path": hlo_path,
+    }
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return record
+    if sharding_mode in ("fsdp", "dp") and cfg.n_experts:
+        record.update(status="error",
+                      error="fsdp mode not wired for shard_map EP archs")
+        return record
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi, dgro_order=dgro_order)
+    data_axes = ("pod", "data") if multi else ("data",)
+    batch_axes = (data_axes + ("model",)
+                  if sharding_mode in ("fsdp", "dp") else data_axes)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    moment_dtype = (jnp.bfloat16 if arch in BF16_MOMENT_ARCHS
+                    else jnp.float32)
+    c_dtype = jnp.float8_e4m3fn if cache_dtype == "fp8" else PARAM_DTYPE
+
+    t0 = time.time()
+    specs_in = input_specs(cfg, shape)
+    b_specs = batch_specs(specs_in, mesh, batch_axes)
+    b_shard = to_shardings(b_specs, mesh)
+
+    if shape.kind == "train":
+        st_shapes = state_shapes(cfg, moment_dtype)
+        # ZeRO axes: in dp/fsdp regimes the moments shard over data+model
+        zero_axes = batch_axes if sharding_mode in ("dp", "fsdp") else data_axes
+        st_specs = state_specs(st_shapes, mesh, zero_axes, zero=True,
+                               mode=sharding_mode,
+                               zero3=arch in ZERO3_ARCHS)
+        st_shard = to_shardings(st_specs, mesh)
+        # ZeRO-2: gradients take the MOMENT sharding (model x data) — the
+        # partitioner then emits reduce-scatter for the grad reduction and
+        # the fp32 accumulator is fully sharded (a model-sharded-only 27B
+        # fp32 accumulator alone is 6.75 GB/device)
+        if pod_compress and multi:
+            from repro.train.pod_compress import pod_compressed_train_step
+            # inside the manual-pod body only auto axes exist: ZeRO over
+            # data, grads pinned to the moment shardings, same adaptive
+            # microbatching as the baseline
+            st_specs = state_specs(st_shapes, mesh, ("data",), zero=True,
+                                   mode=sharding_mode)
+            st_shard = to_shardings(st_specs, mesh)
+            dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+            tokens_per_dev = shape.global_batch * shape.seq_len // dsize
+            local_batch = max(1, shape.global_batch // dsize)
+            mb = max(1, min(tokens_per_dev // 16384, local_batch))
+            while local_batch % mb:
+                mb -= 1
+            if microbatches is not None:
+                mb = microbatches
+            tc = TrainConfig(optimizer=AdamWConfig(lr=3e-4, weight_decay=0.1),
+                             remat=True, microbatches=mb)
+            # bare-PartitionSpec constraints under an ambient mesh: the
+            # NamedSharding form crashes XLA inside the partial-manual
+            # region at 512 devices (see §Perf C)
+            inner = pod_compressed_train_step(
+                cfg, tc, mesh, st_shapes, specs_in, pod_axis="pod",
+                inner_data_axes=("data",),
+                grad_shardings=None)  # XLA check-fails with constraints
+                                      # in partial-manual at 512 dev
+            rules = default_rules(data_axes=("data",), mesh=mesh)
+
+            def step(state, batch):
+                with use_rules(rules):
+                    return inner(state, batch)
+            record["pod_compress"] = True
+        else:
+            step = make_step(cfg, shape, mesh, batch_axes,
+                             grad_shardings=st_shard.opt.mu,
+                             sharding_mode=sharding_mode,
+                             microbatches=microbatches,
+                             ce_chunk=ce_chunk)
+        fn = jax.jit(step, in_shardings=(st_shard, b_shard),
+                     donate_argnums=(0,))
+        if record.pop("_ambient_mesh", False):
+            with jax.set_mesh(mesh):
+                lowered = fn.lower(st_shapes, specs_in)
+        else:
+            lowered = fn.lower(st_shapes, specs_in)
+        n_tokens = shape.global_batch * shape.seq_len
+        params_shapes = st_shapes.params
+    else:
+        step = make_step(cfg, shape, mesh, batch_axes,
+                         sharding_mode=sharding_mode)
+        params_sh = jax.eval_shape(
+            lambda: Mdl.init_params(cfg, jax.random.PRNGKey(0), PARAM_DTYPE))
+        if arch in ZERO3_ARCHS:
+            from repro.launch.shardings import zero3_param_specs
+            p_specs = zero3_param_specs(params_sh, mesh, data_axes)
+        else:
+            p_specs = param_specs(params_sh, mesh, mode=sharding_mode)
+        p_shard = to_shardings(p_specs, mesh)
+        c_shapes = jax.eval_shape(
+            lambda: Mdl.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                    c_dtype))
+        c_specs = cache_specs(c_shapes, mesh, shape.global_batch, batch_axes)
+        c_shard = to_shardings(c_specs, mesh)
+        fn = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_sh, c_shapes, specs_in)
+        n_tokens = shape.global_batch * (shape.seq_len
+                                         if shape.kind == "prefill" else 1)
+        params_shapes = params_sh
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    roof = roofline_from(cost, hlo)           # XLA cost_analysis (no trips)
+    wk = walk(hlo)                            # trip-count-aware walk
+
+    # archive the compiled HLO so any later analysis can re-derive terms
+    import gzip
+    hlo_path = record.get("_hlo_path")
+    if hlo_path:
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+        record["hlo_gz"] = hlo_path
+    record.pop("_hlo_path", None)
+
+    n_active = active_param_count(cfg, params_shapes)
+    n_total = sum(int(l.size) for l in jax.tree.leaves(params_shapes))
+    mf = model_flops(cfg, n_tokens, n_active)
+    if shape.kind != "train":
+        mf /= 3.0               # forward only: 2ND
+
+    from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+    wk_compute = wk.dot_flops / PEAK_FLOPS
+    wk_memory = wk.naive_bytes / HBM_BW
+    wk_coll = wk.collective_bytes / ICI_BW
+    dominant = max((("compute", wk_compute), ("memory", wk_memory),
+                    ("collective", wk_coll)), key=lambda kv: kv[1])[0]
+
+    hbm_per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    record.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            "hbm_per_device_bytes": hbm_per_dev,
+            "fits_16gb": bool(hbm_per_dev < 16e9),
+        },
+        # PRIMARY: trip-count-aware HLO walk (lax.scan bodies multiplied)
+        roofline={
+            "flops": wk.dot_flops,
+            "hbm_bytes": wk.naive_bytes,
+            "collective_bytes": wk.collective_bytes,
+            "compute_s": wk_compute,
+            "memory_s": wk_memory,
+            "collective_s": wk_coll,
+            "dominant": dominant,
+            "by_op": wk.collective_by_op,
+            "n_while": wk.n_while,
+            "max_trip": wk.max_trip,
+        },
+        # reference: XLA cost_analysis (counts loop bodies once)
+        roofline_xla_once=roof.to_dict(),
+        model_flops_global=mf,
+        hlo_flops_global=wk.dot_flops * n_chips,
+        useful_flops_ratio=(mf / (wk.dot_flops * n_chips)
+                            if wk.dot_flops else None),
+        n_params_total=n_total,
+        n_params_active=n_active,
+        moment_dtype=str(np.dtype("float32") if moment_dtype == jnp.float32
+                         else "bfloat16"),
+    )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--dgro-order", action="store_true",
+                    help="DGRO-optimized device order for the DCN axes")
+    ap.add_argument("--force", action="store_true", help="re-run existing cells")
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp", "dp"],
+                    help="parallelism regime (fsdp: §Perf hillclimb)")
+    ap.add_argument("--cache-dtype", default="bf16", choices=["bf16", "fp8"],
+                    help="KV-cache dtype (fp8: §Perf hillclimb)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ce-chunk", type=int, default=0,
+                    help="chunked cross-entropy block size (0=dense)")
+    ap.add_argument("--pod-compress", action="store_true",
+                    help="int8 ring gradient reduce over the pod axis "
+                         "(§Perf hillclimb; multi mesh only)")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[run] {tag}", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, args.dgro_order,
+                                   sharding_mode=args.sharding,
+                                   cache_dtype=args.cache_dtype,
+                                   microbatches=args.microbatches,
+                                   pod_compress=args.pod_compress,
+                                   ce_chunk=args.ce_chunk,
+                                   hlo_path=os.path.join(
+                                       args.out, tag + ".hlo.gz"))
+                except Exception as e:  # noqa: BLE001 - sweep must continue
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                    print(f"  ERROR: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                if rec.get("status") == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok chips={rec['n_chips']} compile={rec['compile_s']}s "
+                          f"hbm/dev={rec['memory']['hbm_per_device_bytes']/1e9:.2f}GB "
+                          f"terms(c/m/coll)={r['compute_s']:.4f}/"
+                          f"{r['memory_s']:.4f}/{r['collective_s']:.4f}s "
+                          f"dom={r['dominant']}", flush=True)
+    print(f"done; {failures} failures")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,223 @@
+"""Parameter/activation/cache PartitionSpec rules for the production mesh.
+
+Name-based rules map every leaf of the model pytree to a PartitionSpec:
+tensor-parallel over ``model`` (heads / ff / vocab / experts / d_inner),
+batch over the data axes, ZeRO over data for optimizer moments.  Every rule
+is divisibility-guarded: a dim that doesn't divide by its mesh axis falls
+back to replicated (never a compile error).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf-name -> UNSTACKED dim index sharded over "model" (leaves under
+# "blocks" carry a leading block-stack dim; index is offset by 1 there).
+# Megatron convention: column-parallel in-projections shard dim 1 (output
+# features); row-parallel out-projections shard dim 0 (input features).
+_NAME_RULES = {
+    # attention / dense mlp
+    "wq": 1, "wk": 1, "wv": 1, "wo": 0,
+    "bq": 0, "bk": 0, "bv": 0,
+    "w_gate": 1, "w_up": 1, "w_down": 0,
+    "embed": 0,                        # vocab-sharded embedding (V, d)
+    "lm_head": 1,
+    "vision_proj": 1,
+    # mamba1 / mamba2: d_inner (or ssm-heads) sharded
+    "wx": 1, "wz": 1, "wdt": 1,
+    "w_dt": 0, "w_b": 0, "w_c": 0,
+    "dt_w": 1, "dt_b": 0,
+    "out_proj": 0,
+    "A_log": 0,                        # mamba1 (di, N) / mamba2 (nh,)
+    "D": 0,
+    "gate_norm": 0,
+    "conv_w": 1,                       # (K, C) depthwise conv, channel-sharded
+    "conv_b": 0,
+}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", str(last))
+
+
+def _in_moe(path) -> bool:
+    return any(getattr(k, "key", None) == "moe" for k in path)
+
+
+def _stacked(path) -> bool:
+    return any(getattr(k, "key", None) == "blocks" for k in path)
+
+
+def spec_for_param(path, shape: Tuple[int, ...], mesh: Mesh,
+                   model_axis: str = "model") -> P:
+    rank = len(shape)
+    spec = [None] * rank
+    name = _leaf_name(path)
+    base = 1 if _stacked(path) else 0
+
+    def try_set(d: int, axis: str):
+        if d < rank and shape[d] % mesh.shape[axis] == 0 \
+                and shape[d] >= mesh.shape[axis]:
+            spec[d] = axis
+
+    if _in_moe(path) and name in ("w_gate", "w_up", "w_down"):
+        try_set(base + 0, model_axis)      # shard the EXPERT dim (EP)
+        return P(*spec)
+    dim = _NAME_RULES.get(name)
+    if dim is not None:
+        try_set(base + dim, model_axis)
+    return P(*spec)
+
+
+def param_specs(params_shapes: PyTree, mesh: Mesh,
+                mode: str = "tp") -> PyTree:
+    """PartitionSpec pytree for a params (shape) pytree.
+
+    mode="tp":   Megatron tensor parallel over the model axis (default).
+    mode="fsdp": weights ZeRO-3-sharded over the model axis on their first
+                 divisible dim; batch additionally shards over model.
+                 (REFUTED for gemma3-1b in §Perf: the partitioner resolves
+                 the contracting-dim/batch axis conflict by replicating
+                 compute — kept for the record.)
+    mode="dp":   pure data parallel: weights REPLICATED, batch over
+                 data+model, optimizer moments ZeRO-sharded (small-model
+                 regime: a 1B model's 2 GB of bf16 weights replicate
+                 cheaply and the only collective is the grad all-reduce —
+                 §Perf hillclimb B iteration 2).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in leaves:
+        if mode == "fsdp":
+            out.append(zero_spec(P(), tuple(leaf.shape), mesh, ("model",)))
+        elif mode == "dp":
+            out.append(P(*([None] * len(leaf.shape))))
+        else:
+            out.append(spec_for_param(path, tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zero_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+              data_axes: Sequence[str]) -> P:
+    """ZeRO: additionally shard the first replicated dim over the data axes
+    (applied to optimizer moments; optionally to params for full FSDP)."""
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (cur, dim) in enumerate(zip(parts, shape)):
+        if cur is None and dim % dsize == 0 and dim >= dsize:
+            parts[i] = tuple(data_axes)
+            break
+    return P(*parts)
+
+
+def zero3_param_specs(params_shapes: PyTree, mesh: Mesh,
+                      data_axes: Sequence[str]) -> PyTree:
+    """ZeRO-3: TP specs PLUS data-axis sharding of each leaf's first free
+    dim — params live fully sharded; XLA all-gathers each block's weights
+    at use inside the layer scan (MaxText-style fsdp)."""
+    base = param_specs(params_shapes, mesh, mode="tp")
+    leaves, td = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = jax.tree.leaves(base)
+    out = [zero_spec(s, tuple(l.shape), mesh, data_axes)
+           for (p, l), s in zip(leaves, specs)]
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+def state_specs(state_shapes: PyTree, mesh: Mesh,
+                data_axes: Sequence[str] = ("data",),
+                zero: bool = True, mode: str = "tp",
+                zero3: bool = False) -> PyTree:
+    """Specs for a TrainState(params, opt(step, mu, nu)) shape pytree."""
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+
+    if zero3:
+        pspecs = zero3_param_specs(state_shapes.params, mesh, data_axes)
+    else:
+        pspecs = param_specs(state_shapes.params, mesh, mode=mode)
+
+    def moment_specs(shapes):
+        leaves, td = jax.tree_util.tree_flatten_with_path(shapes)
+        base = jax.tree.leaves(param_specs(shapes, mesh, mode=mode))
+        out = []
+        for (path, leaf), sp in zip(leaves, base):
+            out.append(zero_spec(sp, tuple(leaf.shape), mesh, data_axes)
+                       if zero else sp)
+        return jax.tree_util.tree_unflatten(td, out)
+
+    opt = AdamWState(step=P(), mu=moment_specs(state_shapes.opt.mu),
+                     nu=moment_specs(state_shapes.opt.nu))
+    return TrainState(params=pspecs, opt=opt)
+
+
+def cache_specs(cache_shapes: PyTree, mesh: Mesh, batch: int,
+                data_axes: Sequence[str] = ("data",),
+                model_axis: str = "model") -> PyTree:
+    """KV/SSM cache specs.  Layout (maybe-stacked over blocks):
+    k/v: (L?, B, Hkv, S, hd);  conv: (L?, B, K, C);  h(m1): (L?, B, di, N);
+    h(m2): (L?, B, nh, hd, N).  Batch over data when divisible (long_500k has
+    B=1 -> replicated), heads/channels over model when divisible."""
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape[model_axis]
+    dp = tuple(data_axes)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        rank = len(shape)
+        name = jax.tree_util.keystr(path)
+        stacked = rank >= 1 and "blocks" in name
+        base = 1 if stacked else 0
+        spec = [None] * rank
+        if shape[base] % dsize == 0 and shape[base] >= dsize:
+            spec[base] = dp
+
+        def fits(d):
+            return d < rank and shape[d] % msize == 0 and shape[d] >= msize
+
+        if re.search(r"\[.(k|v).\]$", name) or rank - base == 4:
+            # KV cache (B, Hkv, S, hd): heads over model when divisible;
+            # otherwise shard the SEQUENCE dim (MHA archs like qwen kv=20,
+            # GQA kv=8 on a 16-way model axis) — attention softmax/psum
+            # partitions cleanly over kv-seq, and the cache is the dominant
+            # decode buffer (17TB for qwen decode_32k unsharded).
+            if fits(base + 1):
+                spec[base + 1] = model_axis
+            elif fits(base + 2):
+                spec[base + 2] = model_axis
+        elif re.search(r"\bconv\]?$", name):
+            if shape[-1] % msize == 0:
+                spec[-1] = model_axis
+        elif re.search(r"\bh\]?$", name):
+            if fits(base + 1):
+                spec[base + 1] = model_axis
+            elif fits(base + 2):
+                spec[base + 2] = model_axis
+        return P(*spec)
+
+    leaves, td = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(td, [one(p, l) for p, l in leaves])
+
+
+def batch_specs(batch_shapes: PyTree, mesh: Mesh,
+                data_axes: Sequence[str] = ("data",)) -> PyTree:
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % dsize == 0 and leaf.shape[0] >= dsize:
+            return P(tuple(data_axes), *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def to_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

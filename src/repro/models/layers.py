@@ -1,0 +1,246 @@
+"""Shared model layers: RMSNorm, RoPE, GQA attention (train/prefill/decode),
+SwiGLU/GELU MLP.  Pure-function + pytree-params style (no flax).
+
+Attention dispatch: the jnp reference path (``repro.kernels.flash_attention.
+ref``) is used on CPU and for dry-run lowering; on TPU the Pallas flash
+kernel is numerically identical (validated in tests/test_kernels.py) and is
+selected with ``impl="flash"``.  The sliding window may be a *traced* scalar
+so gemma3's 5:1 local:global pattern stays inside one lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., T, H, D), positions: (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,T,1,half)
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.hd
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _masked_attention(q, k, v, *, causal_from: jnp.ndarray,
+                      kv_valid: jnp.ndarray, window) -> jnp.ndarray:
+    """fp32 masked softmax attention.
+
+    q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D).
+    causal_from: (Tq,) absolute position of each query row.
+    kv_valid:    (B, Tk) absolute position of each kv slot, or -1 if unwritten.
+    window: None | int | traced scalar (effective window; large = global).
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    groups = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, groups, tq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * scale
+
+    qpos = causal_from[:, None]                        # (Tq, 1)
+    kpos = kv_valid[:, None, None, :]                  # (B, 1, 1, Tk)
+    mask = (kpos >= 0) & (kpos <= qpos[None, None])    # causal + written
+    if window is not None:
+        mask &= qpos[None, None] - kpos < window
+    s = jnp.where(mask[:, :, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, tq, d).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, window, bq: int = 1024,
+                       bk: int = 1024) -> jnp.ndarray:
+    """Memory-bounded causal attention: flash-attention restructured as pure
+    XLA (online softmax over KV panels) — numerically identical to the dense
+    path but with O(bq*bk) score temporaries, so 32k-prefill lowers with a
+    bounded working set on any backend.  The python loop over query blocks
+    gives each block a STATIC KV extent [lo, hi): causal and sliding-window
+    FLOPs are genuinely skipped, not masked (matters for the §Roofline
+    compute term).  q/k/v: (B, H*, T, D) with GQA folding as in
+    ``_masked_attention``.  Assumes self-attention at positions [0, T).
+    """
+    b, hq, t, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, t, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    bq = min(bq, t)
+    assert t % bq == 0, (t, bq)
+    out_blocks = []
+    for qi in range(t // bq):
+        q_lo, q_hi = qi * bq, (qi + 1) * bq
+        lo = 0 if window is None else max(0, q_lo - (int(window) - 1))
+        lo = (lo // bk) * bk
+        hi = q_hi                                   # causal frontier
+        qb = qf[:, :, :, q_lo:q_hi]                 # (B,hkv,g,bq,D)
+        m = jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        acc = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        for k_lo in range(lo, hi, bk):
+            k_hi = min(k_lo + bk, hi)
+            kb = kf[:, :, k_lo:k_hi]
+            vb = vf[:, :, k_lo:k_hi]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
+            qpos = q_lo + jnp.arange(bq)[:, None]
+            kpos = k_lo + jnp.arange(k_hi - k_lo)[None, :]
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= qpos - kpos < int(window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+            m = m_new
+        out_blocks.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.concatenate(out_blocks, axis=3)
+    return out.reshape(b, hq, t, d).astype(q.dtype)
+
+
+CHUNKED_THRESHOLD = 2048
+
+
+def attention_apply(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                       # (B, T, d)
+    cfg: ArchConfig,
+    *,
+    positions: jnp.ndarray,               # (T,) absolute positions
+    window=None,                          # None | int | traced (global if huge)
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (B,Hkv,S,hd) x2
+    cache_pos: Optional[jnp.ndarray] = None,   # scalar: write index (decode)
+    impl: str = "ref",
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """GQA attention for train/prefill (cache=None) and decode (cache given).
+
+    Decode: T==1, the new K/V row is written at ``cache_pos % S`` (rolling for
+    windowed layers where S == window) and attention runs over the cache.
+    """
+    b, t, d = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, hq, hd)
+    k = k.reshape(b, t, hkv, hd)
+    v = v.reshape(b, t, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)                        # (B, Hq, T, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if cache is None:
+        # train / prefill: self-attention over the block
+        static_window = window is None or isinstance(window, int)
+        if impl == "flash" and static_window:
+            from repro.kernels.flash_attention.ops import flash_attention
+            out = flash_attention(q, k, v, causal=True, window=window)
+        elif static_window and t > CHUNKED_THRESHOLD and t % 1024 == 0:
+            out = _chunked_attention(q, k, v, window=window)
+        else:
+            kv_valid = jnp.broadcast_to(positions[None, :], (b, t))
+            out = _masked_attention(q, k, v, causal_from=positions,
+                                    kv_valid=kv_valid, window=window)
+        new_cache = None
+    else:
+        ck, cv = cache                                  # (B, Hkv, S, hd)
+        s = ck.shape[2]
+        slot = (cache_pos % s).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, slot, 0))
+        # slot i holds absolute position p ≡ i (mod s), the latest <= cache_pos
+        idx = jnp.arange(s)
+        abs_pos = cache_pos - ((cache_pos - idx) % s)
+        kv_valid = jnp.where(abs_pos >= 0, abs_pos, -1)
+        kv_valid = jnp.broadcast_to(kv_valid[None, :], (b, s))
+        out = _masked_attention(q, ck, cv, causal_from=positions,
+                                kv_valid=kv_valid, window=window)
+        new_cache = (ck, cv)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, hq * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, kind: str, dtype) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, f, dtype),
+                "w_up": dense_init(ks[1], d, f, dtype),
+                "w_down": dense_init(ks[2], f, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, f, dtype),
+            "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def mlp_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]

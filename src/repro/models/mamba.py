@@ -1,0 +1,290 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks — TPU-native formulations.
+
+Hardware adaptation (DESIGN.md §5): the CUDA selective-scan kernel is a
+fused recurrent kernel; on TPU we use the standard JAX re-formulations:
+
+* mamba1: chunked first-order recurrence.  Within a chunk the recurrence
+  h_t = a_t * h_{t-1} + b_t is evaluated with ``lax.associative_scan``
+  (log-depth, VPU-friendly); chunks are chained with ``lax.scan`` carrying
+  the (B, d_inner, N) state so the materialized temporary stays
+  (B, chunk, d_inner, N) — bounded VMEM/HBM footprint regardless of S.
+* mamba2: SSD block-decomposition (Dao & Gu 2024): intra-chunk quadratic
+  "attention form" (MXU matmuls over (chunk x chunk) per head) + inter-chunk
+  state passing — no (B, S, d_inner, N) tensor ever exists.
+
+Both blocks also expose a single-token ``*_step`` used by decode; its state
+is the pair (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import dense_init, rms_norm
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by both)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, C); w: (K, C); state: (B, K-1, C) trailing inputs or None.
+    Returns (y (B,S,C), new_state (B, K-1, C))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                     # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    y = y + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+def _conv_step(x1: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token conv.  x1: (B, C); state: (B, K-1, C)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([state, x1[:, None, :]], axis=1)        # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", xp, w) + b
+    return y, xp[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# mamba1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg: ArchConfig, dtype) -> Dict[str, jnp.ndarray]:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 9)
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "wx": dense_init(ks[0], d, di, dtype),       # in_proj (x branch)
+        "wz": dense_init(ks[1], d, di, dtype),       # in_proj (gate branch)
+        "conv_w": dense_init(ks[2], cfg.ssm_conv, di, dtype) * 0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_dt": dense_init(ks[3], di, r, dtype),     # x_proj -> dt rank
+        "w_b": dense_init(ks[4], di, n, dtype),      # x_proj -> B
+        "w_c": dense_init(ks[5], di, n, dtype),      # x_proj -> C
+        "dt_w": dense_init(ks[6], r, di, dtype),
+        "dt_b": jnp.full((di,), -4.6, dtype),        # softplus^-1(0.01)
+        "A_log": jnp.log(a).astype(jnp.float32),     # kept fp32 (exp-sensitive)
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def _ssm_scan_chunked(dt: jnp.ndarray, xc: jnp.ndarray, bmat: jnp.ndarray,
+                      cmat: jnp.ndarray, a: jnp.ndarray, h0: jnp.ndarray,
+                      chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective-scan recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+    y_t = C_t . h_t — evaluated chunk-by-chunk so the (B, chunk, d, N) decay/
+    drive temporaries (NOT (B, S, d, N)) are the only working set.
+
+    dt, xc: (B, S, d);  bmat, cmat: (B, S, N);  a: (d, N);  h0: (B, d, N).
+    Returns (y (B, S, d) fp32, h_last).
+    """
+    bsz, s, d = dt.shape
+    n = a.shape[1]
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    def combine(x, y):
+        (a1, b1), (a2, b2) = x, y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_body(h, inp):
+        dtq, xq, bq, cq = inp                          # (B, chunk, ...)
+        decay = jnp.exp(dtq[..., None] * a)            # (B, chunk, d, N)
+        drive = (dtq * xq)[..., None] * bq[:, :, None, :]
+        a_cum, b_cum = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cq)
+        return h_all[:, -1], y
+
+    h_last, y_c = jax.lax.scan(
+        chunk_body, h0, (to_chunks(dt), to_chunks(xc), to_chunks(bmat),
+                         to_chunks(cmat)))
+    return y_c.swapaxes(0, 1).reshape(bsz, s, d), h_last
+
+
+def mamba1_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                 state: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
+                 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Sequence-mode mamba1.  x: (B, S, d).  state: (conv_state, h) or None.
+    Returns (y (B,S,d), new_state)."""
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_state, h0 = state if state is not None else (None, None)
+
+    xin = x @ p["wx"]                                  # (B, S, di)
+    z = x @ p["wz"]
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus((xc @ p["w_dt"]) @ p["dt_w"]
+                         + p["dt_b"].astype(jnp.float32))          # (B,S,di)
+    bmat = (xc @ p["w_b"]).astype(jnp.float32)                     # (B,S,N)
+    cmat = (xc @ p["w_c"]).astype(jnp.float32)                     # (B,S,N)
+    a = -jnp.exp(p["A_log"])                                       # (di,N)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    y, h_last = _ssm_scan_chunked(dt, xc.astype(jnp.float32), bmat, cmat,
+                                  a, h0, chunk)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], (conv_state, h_last)
+
+
+def mamba1_step(p, x1: jnp.ndarray, cfg: ArchConfig,
+                state: Tuple[jnp.ndarray, jnp.ndarray],
+                ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token decode.  x1: (B, d); state=(conv (B,K-1,di), h (B,di,N))."""
+    conv_state, h = state
+    xin = x1 @ p["wx"]
+    z = x1 @ p["wz"]
+    xc, conv_state = _conv_step(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus((xc @ p["w_dt"]) @ p["dt_w"]
+                         + p["dt_b"].astype(jnp.float32))          # (B,di)
+    bmat = (xc @ p["w_b"]).astype(jnp.float32)                     # (B,N)
+    cmat = (xc @ p["w_c"]).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])
+    h = jnp.exp(dt[..., None] * a) * h \
+        + (dt * xc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype)
+    return y @ p["out_proj"], (conv_state, h)
+
+
+def mamba1_state_shape(cfg: ArchConfig, batch: int):
+    return ((batch, cfg.ssm_conv - 1, cfg.d_inner),
+            (batch, cfg.d_inner, cfg.ssm_state))
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> Dict[str, jnp.ndarray]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 8)
+    conv_dim = di + 2 * n
+    return {
+        "wz": dense_init(ks[0], d, di, dtype),
+        "wx": dense_init(ks[1], d, di, dtype),
+        "wb": dense_init(ks[2], d, n, dtype),
+        "wc": dense_init(ks[3], d, n, dtype),
+        "wdt": dense_init(ks[4], d, nh, dtype),
+        "conv_w": dense_init(ks[5], cfg.ssm_conv, conv_dim, dtype) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_b": jnp.full((nh,), -4.6, jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def mamba2_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                 state: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
+                 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Sequence-mode SSD.  x: (B,S,d).  state=(conv_state, h (B,nh,hd,N))."""
+    bsz, s, _ = x.shape
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    conv_state, h0 = state if state is not None else (None, None)
+
+    z = x @ p["wz"]                                       # (B,S,di)
+    xbc = jnp.concatenate([x @ p["wx"], x @ p["wb"], x @ p["wc"]], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + n].astype(jnp.float32)        # (B,S,N)
+    cmat = xbc[..., di + n:].astype(jnp.float32)          # (B,S,N)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_b"])  # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                              # (nh,)
+
+    xh = xs.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xh_c = xh.reshape(bsz, nc, chunk, nh, hd).swapaxes(0, 1)
+    b_c = bmat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    c_c = cmat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    dt_c = dt.reshape(bsz, nc, chunk, nh).swapaxes(0, 1)
+
+    def chunk_body(h, inp):
+        xq, bq, cq, dtq = inp                              # per-chunk slices
+        la = dtq * a                                       # (B,Q,nh) log-decay
+        cum = jnp.cumsum(la, axis=1)                       # (B,Q,nh)
+        # intra-chunk quadratic form: M[q,k] = C_q.B_k * exp(cum_q - cum_k), q>=k
+        qk = jnp.einsum("bqn,bkn->bqk", cq, bq)            # (B,Q,Q)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Q,K,nh)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(causal[None, :, :, None], jnp.exp(ldiff), 0.0)
+        m = m * qk[:, :, :, None]                          # (B,Q,K,nh)
+        xdt = xq * dtq[..., None]                          # (B,K,nh,hd)
+        y_intra = jnp.einsum("bqkh,bkhd->bqhd", m, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqn,bhdn->bqhd", cq, h) * jnp.exp(cum)[..., None]
+        # new state
+        wgt = jnp.exp(cum[:, -1:, :] - cum)                # (B,Q,nh)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bkhd,bkn,bkh->bhdn", xdt, bq, wgt)
+        return h_new, y_intra + y_inter
+
+    h_last, y_c = jax.lax.scan(chunk_body, h0, (xh_c, b_c, c_c, dt_c))
+    y = y_c.swapaxes(0, 1).reshape(bsz, s, nh, hd)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(bsz, s, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_state, h_last)
+
+
+def mamba2_step(p, x1: jnp.ndarray, cfg: ArchConfig,
+                state: Tuple[jnp.ndarray, jnp.ndarray],
+                ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token decode.  x1: (B, d)."""
+    conv_state, h = state
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    z = x1 @ p["wz"]
+    xbc = jnp.concatenate([x1 @ p["wx"], x1 @ p["wb"], x1 @ p["wc"]], axis=-1)
+    xbc, conv_state = _conv_step(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(-1, nh, hd).astype(jnp.float32)
+    bmat = xbc[..., di:di + n].astype(jnp.float32)
+    cmat = xbc[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus((x1 @ p["wdt"]).astype(jnp.float32) + p["dt_b"])
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                # (B,nh)
+    h = decay[:, :, None, None] * h + jnp.einsum(
+        "bhd,bn,bh->bhdn", xs, bmat, dt)
+    y = jnp.einsum("bhdn,bn->bhd", h, cmat) + p["D"][:, None] * xs
+    y = y.reshape(-1, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_state, h)
+
+
+def mamba2_state_shape(cfg: ArchConfig, batch: int):
+    nh = cfg.d_inner // cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return ((batch, cfg.ssm_conv - 1, conv_dim),
+            (batch, nh, cfg.ssm_head_dim, cfg.ssm_state))

@@ -1,0 +1,408 @@
+"""Model assembly: one generic decoder stack covering all 10 assigned
+architectures, parameterized by ``ArchConfig``.
+
+Layer weights are stacked on a leading block axis and iterated with
+``lax.scan`` (compile-time O(1) in depth).  Architectures with a periodic
+layer PATTERN (gemma3's 5 local + 1 global, llama4's dense/MoE interleave,
+zamba2's every-6th shared-attention) scan over pattern BLOCKS with the
+pattern unrolled inside the body, so e.g. gemma3's local layers get
+window-sized KV caches while global layers get full-length ones —
+the difference that makes long_500k fit (DESIGN.md §6).
+
+Modes:
+  * train:   full-sequence causal; returns (logits, aux_loss)
+  * prefill: full-sequence causal + builds KV/SSM caches; returns
+             (last-position logits, caches, aux)
+  * decode:  single token against caches; returns (logits, new_caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import mamba as M
+from .layers import attention_apply, init_attention, init_mlp, mlp_apply, rms_norm
+from .moe import init_moe, moe_apply, router_aux_loss
+from .sharding import shard
+
+PyTree = Any
+GLOBAL_WINDOW = None  # window=None => full attention
+
+
+# ---------------------------------------------------------------------------
+# pattern machinery
+# ---------------------------------------------------------------------------
+
+def pattern_period(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        return max(cfg.shared_attn_period, 1)
+    if cfg.family == "moe":
+        return max(cfg.moe_period, 1)
+    if cfg.sliding_window is not None and cfg.global_period > 0:
+        return cfg.global_period
+    return 1
+
+
+def layer_kind(cfg: ArchConfig, j: int) -> Dict[str, Any]:
+    """Kind of the layer at pattern position j (absolute index i ≡ j mod P)."""
+    if cfg.family == "ssm":
+        return {"type": cfg.ssm_kind}
+    if cfg.family == "hybrid":
+        return {"type": cfg.ssm_kind, "shared_attn": cfg.is_attn_block(j)}
+    kind = {"type": "moe" if cfg.is_moe_layer(j) else "dense"}
+    if cfg.sliding_window is not None:
+        kind["window"] = None if cfg.is_global_layer(j) else cfg.sliding_window
+    else:
+        kind["window"] = None
+    return kind
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, kind: Dict[str, Any], key, dtype) -> PyTree:
+    ks = jax.random.split(key, 6)
+    t = kind["type"]
+    if t in ("mamba1", "mamba2"):
+        init = M.init_mamba1 if t == "mamba1" else M.init_mamba2
+        return {"ln": jnp.zeros((cfg.d_model,), dtype),
+                "mamba": init(ks[0], cfg, dtype)}
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "attn": init_attention(ks[0], cfg, dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if t == "moe":
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+        if cfg.shared_expert:
+            p["shared_mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                       cfg.mlp_kind, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> PyTree:
+    per = pattern_period(cfg)
+    n_blocks, n_rem = divmod(cfg.n_layers, per)
+    keys = jax.random.split(key, 8)
+    from .layers import dense_init
+
+    params: Dict[str, PyTree] = {
+        "embed": dense_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    if cfg.frontend == "vision":
+        params["vision_proj"] = dense_init(keys[2], cfg.d_model, cfg.d_model, dtype)
+
+    blocks = {}
+    if n_blocks > 0:
+        for j in range(per):
+            kind = layer_kind(cfg, j)
+            bkeys = jax.random.split(jax.random.fold_in(keys[3], j), n_blocks)
+            blocks[f"pos{j}"] = jax.vmap(
+                lambda k: _init_layer(cfg, kind, k, dtype))(bkeys)
+    params["blocks"] = blocks
+    params["rem"] = {
+        f"rem{j}": _init_layer(cfg, layer_kind(cfg, j),
+                               jax.random.fold_in(keys[4], j), dtype)
+        for j in range(n_rem)
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(keys[5], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": init_mlp(keys[6], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+        }
+    return params
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ArchConfig, kind: Dict[str, Any], batch: int,
+                 max_len: int, dtype) -> PyTree:
+    t = kind["type"]
+    cache: Dict[str, jnp.ndarray] = {}
+    # fp8 applies to the big K/V buffers only; SSM conv state is tiny and
+    # participates directly in bf16 math
+    state_dtype = jnp.bfloat16 if dtype == jnp.float8_e4m3fn else dtype
+    if t in ("mamba1", "mamba2"):
+        shp = (M.mamba1_state_shape if t == "mamba1"
+               else M.mamba2_state_shape)(cfg, batch)
+        cache["conv"] = jnp.zeros(shp[0], state_dtype)
+        cache["h"] = jnp.zeros(shp[1], jnp.float32)
+        if kind.get("shared_attn"):
+            cache["k"] = jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.hd), dtype)
+            cache["v"] = jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.hd), dtype)
+        return cache
+    s = max_len if kind.get("window") is None else min(kind["window"], max_len)
+    cache["k"] = jnp.zeros((batch, cfg.n_kv_heads, s, cfg.hd), dtype)
+    cache["v"] = jnp.zeros((batch, cfg.n_kv_heads, s, cfg.hd), dtype)
+    return cache
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.float32) -> PyTree:
+    per = pattern_period(cfg)
+    n_blocks, n_rem = divmod(cfg.n_layers, per)
+    caches: Dict[str, PyTree] = {"blocks": {}, "rem": {}}
+    for j in range(per):
+        if n_blocks == 0:
+            break
+        one = _layer_cache(cfg, layer_kind(cfg, j), batch, max_len, dtype)
+        caches["blocks"][f"pos{j}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_blocks,) + x.shape), one)
+    for j in range(n_rem):
+        caches["rem"][f"rem{j}"] = _layer_cache(
+            cfg, layer_kind(cfg, j), batch, max_len, dtype)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _write_prefill_cache(cache_kv, k_new, v_new):
+    """Fill a KV cache from prefill K/V (B, Hkv, S, hd); for window-sized
+    caches the last S_c positions land at their rolling slots."""
+    s_c = cache_kv["k"].shape[2]
+    s = k_new.shape[2]
+    if s >= s_c:
+        tail_pos = jnp.arange(s - s_c, s)
+        slots = tail_pos % s_c
+        k = cache_kv["k"].at[:, :, slots, :].set(
+            k_new[:, :, s - s_c:, :].astype(cache_kv["k"].dtype))
+        v = cache_kv["v"].at[:, :, slots, :].set(
+            v_new[:, :, s - s_c:, :].astype(cache_kv["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache_kv["k"], k_new.astype(cache_kv["k"].dtype), (0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache_kv["v"], v_new.astype(cache_kv["v"].dtype), (0, 0, 0, 0))
+    return {"k": k, "v": v}
+
+
+def _attn_mlp_layer(cfg: ArchConfig, kind, lp, x, *, positions, cache,
+                    cache_pos, mesh, data_axes, mode):
+    window = kind.get("window")
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if mode == "decode":
+        attn_out, kv = attention_apply(
+            lp["attn"], h, cfg, positions=positions, window=window,
+            cache=(cache["k"], cache["v"]), cache_pos=cache_pos)
+        new_kv = {"k": kv[0], "v": kv[1]}
+    else:
+        attn_out, _ = attention_apply(lp["attn"], h, cfg,
+                                      positions=positions, window=window)
+        new_kv = None
+        if mode == "prefill":
+            # recompute K/V once more is wasteful; attention_apply returns
+            # them only in decode, so build them here from h
+            new_kv = _prefill_kv(cfg, lp["attn"], h, positions, cache)
+    x = x + attn_out
+    x = shard(x, "batch", "seq", "embed")
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if kind["type"] == "moe":
+        moe_out, probs = moe_apply(lp["moe"], h2, cfg, mesh=mesh,
+                                   data_axes=data_axes)
+        if cfg.shared_expert:
+            moe_out = moe_out + mlp_apply(lp["shared_mlp"], h2, cfg.mlp_kind)
+        x = x + moe_out
+        aux = router_aux_loss(probs)
+    else:
+        x = x + mlp_apply(lp["mlp"], h2, cfg.mlp_kind)
+    x = shard(x, "batch", "seq", "embed")
+    new_cache = None
+    if new_kv is not None:
+        new_cache = dict(cache)
+        new_cache.update(new_kv)
+    return x, new_cache, aux
+
+
+def _prefill_kv(cfg: ArchConfig, ap, h, positions, cache):
+    """K/V for the prefill cache (rope'd, matching decode-time layout)."""
+    from .layers import rope
+    b, s, _ = h.shape
+    k = h @ ap["wk"]
+    v = h @ ap["wv"]
+    if cfg.qkv_bias:
+        k, v = k + ap["bk"], v + ap["bv"]
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, ap["k_norm"], cfg.norm_eps)
+    k = rope(k, positions, cfg.rope_theta)
+    return _write_prefill_cache(cache, k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3))
+
+
+def _ssm_layer(cfg: ArchConfig, kind, lp, x, *, cache, mode, shared_params,
+               positions, cache_pos, mesh, data_axes):
+    t = kind["type"]
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    state = (cache["conv"], cache["h"]) if cache is not None else None
+    new_cache = dict(cache) if cache is not None else None
+    if mode == "decode":
+        step = M.mamba1_step if t == "mamba1" else M.mamba2_step
+        y, (conv, hh) = step(lp["mamba"], h[:, 0, :], cfg, state)
+        y = y[:, None, :]
+        new_cache["conv"], new_cache["h"] = conv, hh
+    else:
+        apply = M.mamba1_apply if t == "mamba1" else M.mamba2_apply
+        y, (conv, hh) = apply(lp["mamba"], h, cfg, state)
+        if mode == "prefill":
+            new_cache["conv"], new_cache["h"] = conv.astype(
+                new_cache["conv"].dtype), hh
+    x = x + y
+    x = shard(x, "batch", "seq", "embed")
+    aux = jnp.float32(0.0)
+    if kind.get("shared_attn"):
+        sp = shared_params
+        hh2 = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            attn_out, new_kv = attention_apply(
+                sp["attn"], hh2, cfg, positions=positions, window=None,
+                cache=(cache["k"], cache["v"]), cache_pos=cache_pos)
+            new_cache["k"], new_cache["v"] = new_kv[0], new_kv[1]
+        else:
+            attn_out, _ = attention_apply(sp["attn"], hh2, cfg,
+                                          positions=positions, window=None)
+            if mode == "prefill":
+                kv = _prefill_kv(cfg, sp["attn"], hh2, positions,
+                                 {"k": cache["k"], "v": cache["v"]})
+                new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+        x = x + attn_out
+        x = x + mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps),
+                          cfg.mlp_kind)
+        x = shard(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+def _apply_layer(cfg, kind, lp, x, **kw):
+    if kind["type"] in ("mamba1", "mamba2"):
+        return _ssm_layer(cfg, kind, lp, x, cache=kw.get("cache"),
+                          mode=kw["mode"], shared_params=kw.get("shared_params"),
+                          positions=kw["positions"], cache_pos=kw.get("cache_pos"),
+                          mesh=kw.get("mesh"), data_axes=kw.get("data_axes"))
+    return _attn_mlp_layer(cfg, kind, lp, x, positions=kw["positions"],
+                           cache=kw.get("cache"), cache_pos=kw.get("cache_pos"),
+                           mesh=kw.get("mesh"), data_axes=kw.get("data_axes"),
+                           mode=kw["mode"])
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ArchConfig,
+    params: PyTree,
+    tokens: jnp.ndarray,                    # (B, S) int32 (S=1 for decode)
+    *,
+    mode: str = "train",                    # train | prefill | decode
+    caches: Optional[PyTree] = None,
+    pos: Optional[jnp.ndarray] = None,      # decode: scalar position
+    vision_embeds: Optional[jnp.ndarray] = None,   # (B, Np, d) stub frontend
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    remat: bool = False,
+):
+    per = pattern_period(cfg)
+    kinds = [layer_kind(cfg, j) for j in range(per)]
+    n_blocks, n_rem = divmod(cfg.n_layers, per)
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.qk_norm:                          # gemma3 scales embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.frontend == "vision" and vision_embeds is not None:
+        vis = vision_embeds @ params["vision_proj"]
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)  # early fusion
+    x = shard(x, "batch", "seq", "embed")
+
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = pos[None].astype(jnp.int32)
+        cache_pos = pos
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)
+        cache_pos = None
+
+    shared_params = params.get("shared_attn")
+    kw = dict(mode=mode, positions=positions, cache_pos=cache_pos, mesh=mesh,
+              data_axes=data_axes, shared_params=shared_params)
+
+    def block_body(carry, xs_):
+        x_, aux_ = carry
+        bp, bc = xs_
+        new_bc = {}
+        for j in range(per):
+            cache_j = bc[f"pos{j}"] if bc is not None else None
+            x_, nc, aj = _apply_layer(cfg, kinds[j], bp[f"pos{j}"], x_,
+                                      cache=cache_j, **kw)
+            new_bc[f"pos{j}"] = nc
+            aux_ = aux_ + aj
+        return (x_, aux_), new_bc
+
+    body = block_body
+    if remat:
+        body = jax.checkpoint(block_body, prevent_cse=False,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    aux = jnp.float32(0.0)
+    if n_blocks > 0:
+        if caches is not None:
+            (x, aux), new_block_caches = jax.lax.scan(
+                body, (x, aux), (params["blocks"], caches["blocks"]))
+        else:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, bp: (body(c, (bp, None))[0], None),
+                (x, aux), params["blocks"])
+            new_block_caches = None
+    else:
+        new_block_caches = caches["blocks"] if caches is not None else None
+
+    new_rem = {}
+    for j in range(n_rem):
+        cache_j = caches["rem"][f"rem{j}"] if caches is not None else None
+        x, nc, aj = _apply_layer(cfg, kinds[j], params["rem"][f"rem{j}"], x,
+                                 cache=cache_j, **kw)
+        new_rem[f"rem{j}"] = nc
+        aux = aux + aj
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # gather the (small) residual over the model axis BEFORE the vocab-sharded
+    # head matmul: otherwise the partitioner resolves the model-axis conflict
+    # (x sharded on d, logits sharded on V) by all-gathering full-vocab
+    # dlogits in the embed-grad — tens of GB/device at 262k vocab.
+    x = shard(x, "batch", "seq", None)
+
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if mode == "train_hidden":
+        # memory-efficient CE path: caller contracts x @ head in chunks
+        return x, head, aux
+    if mode == "train":
+        logits = x @ head
+        logits = shard(logits, "batch", "seq", "vocab")
+        return logits, aux
+    # prefill/decode: only the last position's logits are needed
+    logits = x[:, -1, :] @ head
+    logits = shard(logits, "batch", "vocab")
+    new_caches = None
+    if caches is not None:
+        new_caches = {"blocks": new_block_caches, "rem": new_rem}
+    if mode == "prefill":
+        return logits, new_caches, aux
+    return logits, new_caches

@@ -1,0 +1,118 @@
+"""Logical-axis sharding context.
+
+Models annotate activations with LOGICAL axes (``shard(x, "batch", "seq",
+"embed")``); the launcher installs ``ShardingRules`` mapping logical axes to
+mesh axes.  With no rules installed (CPU smoke tests) every annotation is a
+no-op, so the same model code runs single-device and multi-pod.
+
+This indirection is the perf-iteration lever: §Perf experiments change the
+rules (e.g. embed-dim sharding of the residual stream between layers —
+Megatron-SP style), never the model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: Dict[str, Axis]
+    mesh: Optional[object] = None   # jax Mesh; needed for NamedSharding
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.rules.get(ax) if ax else None for ax in logical))
+
+
+# default logical->mesh mapping for the production mesh (see launch/mesh.py)
+def default_rules(data_axes: Tuple[str, ...] = ("data",),
+                  model_axis: str = "model", mesh=None) -> ShardingRules:
+    return ShardingRules(mesh=mesh, rules={
+        "batch": data_axes,        # batch over pod+data
+        "seq": None,
+        "embed": model_axis,       # residual-stream d_model (Megatron-SP carry)
+        "embed_r": None,           # residual stream kept replicated (baseline)
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "ff": model_axis,
+        "vocab": model_axis,
+        "experts": model_axis,
+        "ssm_inner": model_axis,
+        "state": None,
+    })
+
+
+def fsdp_rules(data_axes: Tuple[str, ...] = ("data",),
+               model_axis: str = "model", mesh=None) -> ShardingRules:
+    """FSDP regime: batch shards over data+model, weights are ZeRO-3 over
+    model (see launch.shardings.param_specs mode="fsdp"), activations stay
+    replicated across model — per-layer weight all-gathers replace TP's
+    activation all-reduces (wins when weights << activations per layer)."""
+    return ShardingRules(mesh=mesh, rules={
+        "batch": tuple(data_axes) + (model_axis,),
+        "seq": None, "embed": None, "embed_r": None,
+        "heads": None, "kv_heads": None, "ff": None,
+        "vocab": None, "experts": None, "ssm_inner": None, "state": None,
+    })
+
+
+def dp_rules(data_axes: Tuple[str, ...] = ("data",),
+             model_axis: str = "model", mesh=None) -> ShardingRules:
+    """DP + vocab-TP regime (§Perf hillclimb B iteration 3): per-layer
+    weights replicated (no TP collectives), batch over data, ZeRO'd
+    moments; ONLY the embedding/lm_head stay vocab-sharded over model so
+    the fp32 CE working set stays 1/16th."""
+    return ShardingRules(mesh=mesh, rules={
+        "batch": tuple(data_axes),
+        "seq": None, "embed": None, "embed_r": None,
+        "heads": None, "kv_heads": None, "ff": None,
+        "vocab": model_axis, "experts": None, "ssm_inner": None,
+        "state": None,
+    })
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    _ACTIVE.append(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; no-op without rules."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(*logical)
+    # drop axes that don't divide the corresponding dim (e.g. batch=1 decode)
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= dict(rules.mesh.shape)[a] if rules.mesh is not None else 1
+        fixed.append(ax if size and dim % max(size, 1) == 0 and dim >= size else None)
+    spec = P(*fixed)
+    if rules.mesh is not None:
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,235 @@
+"""Trip-count-aware HLO cost walk.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, but our step
+functions put everything interesting inside loops (lax.scan over layer
+blocks, microbatches, attention KV chunks).  This module re-derives the
+roofline inputs from the compiled HLO text with loop multipliers:
+
+  * parse the module into computations and instructions;
+  * infer each while loop's trip count from its condition computation
+    (compare(iv, constant(N), LT) pattern emitted by lax.scan/fori_loop);
+  * walk the call graph (entry -> fusions/calls/conditionals/whiles) with
+    multipliers, accumulating
+      - dot FLOPs:        2 * |result| * (contracted extent)     [MXU work]
+      - naive HBM bytes:  operand + result bytes per instruction  [upper-ish
+                           bound; intra-fusion reuse not modelled]
+      - collective bytes: ring-model transfer per op (analysis.py)
+  * conditionals take the max across branches (decode cells guard rolling
+    cache writes with conditionals).
+
+Elementwise FLOPs are not counted (dots dominate every cell); transcendental
+cost is folded into the bytes term via its operands.  The walk is validated
+against unrolled-vs-scanned reference programs in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .analysis import _DTYPE_BYTES, Collective, parse_collectives
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_KNOWN_TRIP = re.compile(r'known_trip_count.+?"n":"(\d+)"')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<args>[^)]*)\)(?P<attrs>.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    args: List[str]
+    attrs: str
+    line: str
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, List[Instr]], Dict[str, str], str]:
+    """Returns (computations, name->type map, entry computation name)."""
+    comps: Dict[str, List[Instr]] = {}
+    types: Dict[str, str] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):            # computation header / brace
+            stripped = line.strip()
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HEADER.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+            elif stripped == "}":
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        args = [a.strip().lstrip("%") for a in m.group("args").split(",")
+                if a.strip()]
+        ins = Instr(name=m.group("name"), type_str=m.group("type"),
+                    op=m.group("op"), args=args, attrs=m.group("attrs"),
+                    line=line)
+        comps[cur].append(ins)
+        types[ins.name] = ins.type_str
+        # parameters also carry types: "%p = f32[..] parameter(0)"
+    return comps, types, entry
+
+
+def _called(attrs: str, key: str) -> List[str]:
+    # e.g. calls=%fused_computation.12 | body=%region_0.1 | condition=%r.2
+    out = []
+    for m in re.finditer(key + r"=%?([\w.\-]+)", attrs):
+        out.append(m.group(1))
+    return out
+
+
+def _trip_count(cond_comp: List[Instr]) -> int:
+    """lax loops compare the induction variable against constant(N), LT."""
+    consts = {}
+    for ins in cond_comp:
+        if ins.op == "constant":
+            m = _TRIP.search(ins.line)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond_comp:
+        if ins.op == "compare" and "direction=LT" in ins.attrs:
+            for a in ins.args:
+                if a in consts:
+                    return max(1, consts[a])
+    # fallback: any constant in the condition
+    if consts:
+        return max(1, max(consts.values()))
+    return 1
+
+
+def _dot_flops(ins: Instr, types: Dict[str, str]) -> float:
+    out = _shape_dims(ins.type_str)
+    if out is None:
+        return 0.0
+    result_elems = float(np.prod(out[1])) if out[1] else 1.0
+    lhs = ins.args[0] if ins.args else None
+    k = 1.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if lhs and lhs in types and m:
+        ldims = _shape_dims(types[lhs])
+        if ldims:
+            for d in m.group(1).split(","):
+                if d and int(d) < len(ldims[1]):
+                    k *= ldims[1][int(d)]
+    return 2.0 * result_elems * k
+
+
+def _instr_bytes(ins: Instr, types: Dict[str, str]) -> float:
+    b = float(_shape_bytes(ins.type_str))
+    for a in ins.args:
+        if a in types:
+            b += _shape_bytes(types[a])
+    return b
+
+
+@dataclasses.dataclass
+class WalkCosts:
+    dot_flops: float = 0.0
+    naive_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def walk(hlo: str) -> WalkCosts:
+    comps, types, entry = parse_module(hlo)
+    costs = WalkCosts()
+    memo_lines: Dict[str, List[str]] = {}
+
+    def comp_collectives(name: str) -> List[Collective]:
+        lines = memo_lines.setdefault(
+            name, [i.line for i in comps.get(name, [])])
+        return parse_collectives("\n".join(lines))
+
+    visited_stack = []
+
+    def visit(comp: str, mult: float, in_fusion: bool = False):
+        """in_fusion: inside a fusion computation HBM traffic is the call
+        site's operands/result, not the internal elementwise chain — bytes
+        are only accumulated for scheduled (non-fusion) computations."""
+        if comp not in comps or comp in visited_stack:
+            return
+        visited_stack.append(comp)
+        for c in comp_collectives(comp):
+            costs.collective_bytes += mult * c.transfer_bytes
+            costs.collective_by_op[c.op] = costs.collective_by_op.get(
+                c.op, 0.0) + mult * c.transfer_bytes
+        for ins in comps[comp]:
+            if ins.op == "dot":
+                costs.dot_flops += mult * _dot_flops(ins, types)
+            if not in_fusion and ins.op not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional"):
+                costs.naive_bytes += mult * _instr_bytes(ins, types)
+            if ins.op == "while":
+                conds = _called(ins.attrs, "condition")
+                bodies = _called(ins.attrs, "body")
+                kt = _KNOWN_TRIP.search(ins.attrs)   # XLA's own annotation
+                if kt:
+                    trip = max(1, int(kt.group(1)))
+                else:
+                    trip = _trip_count(comps.get(conds[0], [])) if conds else 1
+                costs.n_while += 1
+                costs.max_trip = max(costs.max_trip, trip)
+                for b in bodies:
+                    visit(b, mult * trip, in_fusion)
+            elif ins.op in ("fusion",):
+                for c in _called(ins.attrs, "calls"):
+                    visit(c, mult, True)
+            elif ins.op in ("call", "async-start"):
+                for c in _called(ins.attrs, "calls"):
+                    visit(c, mult, in_fusion)
+            elif ins.op == "conditional":
+                branches = (_called(ins.attrs, "true_computation")
+                            + _called(ins.attrs, "false_computation")
+                            + _called(ins.attrs, "branch_computations"))
+                for br in branches:   # branches are tiny here; count each
+                    visit(br, mult, in_fusion)
+        visited_stack.pop()
+
+    visit(entry, 1.0)
+    return costs

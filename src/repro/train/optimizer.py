@@ -1,0 +1,110 @@
+"""Minimal optax-free optimizer stack (pure pytree transforms).
+
+Provides AdamW with decoupled weight decay, global-norm clipping and a
+warmup+cosine schedule.  Used by both the DGRO Q-network (repro.core) and the
+LM training substrate (repro.train.train_step).  Optimizer moments are stored
+in fp32 regardless of parameter dtype; state is a pytree with the same
+structure as params, so pjit shards it with the params (ZeRO-style extra
+sharding is applied in train_step via explicit out_shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "warmup_cosine", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # ()
+    mu: PyTree          # first moment, fp32
+    nu: PyTree          # second moment, fp32
+
+
+def adamw_init(params: PyTree, moment_dtype=jnp.float32) -> AdamWState:
+    """``moment_dtype``: fp32 default; bf16 halves optimizer HBM for the
+    largest archs (llama4-maverick on a single pod) at some update noise —
+    the MaxText-style trade, see DESIGN.md §8."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+) -> Tuple[PyTree, AdamWState, jnp.ndarray]:
+    """One AdamW step.  Returns (new_params, new_state, grad_norm)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state.step + 1
+    lr = cfg.schedule(step) if cfg.schedule is not None else jnp.asarray(cfg.lr)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        mdt = m.dtype
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), gnorm

@@ -1,0 +1,212 @@
+"""Training step: masked cross-entropy + AdamW, microbatch gradient
+accumulation, remat, MoE aux loss — all pjit-compatible.
+
+Label convention: ``labels < 0`` positions (padding, vision-patch positions,
+doc boundaries) are excluded from the loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as Mdl
+from repro.models.sharding import shard
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    microbatches: int = 1          # gradient-accumulation steps
+    aux_weight: float = 0.01       # MoE load-balancing loss weight
+    z_weight: float = 1e-4         # z-loss (logit norm regularizer)
+    ce_chunk: int = 0              # >0: chunked CE — never materializes the
+                                   # full (B,S,V) logits (S-chunks of this
+                                   # size; chunk fwd is rematerialized in bwd)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_weight: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked token-mean CE.  logits (B,S,V) any dtype; labels (B,S) int,
+    negatives masked.  Returns (loss, n_tokens).
+
+    Sharding note: logits arrive VOCAB-SHARDED over the model axis.  The
+    gold logit is picked with an iota==label comparison + reduction (partial
+    per shard, small (B,S) all-reduce) — a ``take_along_axis`` here would
+    all-gather the full logits (tens of GB/device at 262k vocab)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    # stable logsumexp over the (sharded) vocab axis: reductions only
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1))
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits32 - m[..., None]), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == lab[..., None], logits32, 0.0),
+                   axis=-1)
+    nll = (lse - gold) * mask
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / n
+    if z_weight:
+        loss = loss + z_weight * jnp.sum(jnp.square(lse) * mask) / n
+    return loss, n
+
+
+def chunked_cross_entropy(x: jnp.ndarray, head: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int,
+                          z_weight: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CE without materializing (B,S,V) logits: scan over S-chunks, each
+    chunk's logits rematerialized in the backward (jax.checkpoint).  Peak
+    extra memory = one (B,chunk,V) block."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)       # (nc, B, chunk, d)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def one(xb, lb):
+        logits = xb @ head
+        mask = (lb >= 0).astype(jnp.float32)
+        lab = jnp.maximum(lb, 0)
+        lg32 = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(lg32, axis=-1))
+        lse = m + jnp.log(jnp.sum(jnp.exp(lg32 - m[..., None]), axis=-1))
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == lab[..., None], lg32, 0.0), axis=-1)
+        nll = jnp.sum((lse - gold) * mask)
+        zl = jnp.sum(jnp.square(lse) * mask)
+        return nll, zl, mask.sum()
+
+    def body(carry, inp):
+        nll, zl, n = carry
+        xb, lb = inp
+        a, b_, c = one(xb, lb)
+        return (nll + a, zl + b_, n + c), None
+
+    (nll, zl, n), _ = jax.lax.scan(body, (0.0, 0.0, 0.0), (xc, lc))
+    n = jnp.maximum(n, 1.0)
+    loss = nll / n
+    if z_weight:
+        loss = loss + z_weight * zl / n
+    return loss, n
+
+
+def loss_fn(cfg: ArchConfig, tc: TrainConfig, params: PyTree,
+            batch: Dict[str, jnp.ndarray], mesh=None,
+            data_axes=("data",)) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        np_ = batch["vision_embeds"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (np_,), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)  # patches: no loss
+
+    if tc.ce_chunk:
+        x, head, aux = Mdl.forward(
+            cfg, params, batch["tokens"], mode="train_hidden",
+            vision_embeds=batch.get("vision_embeds"), mesh=mesh,
+            data_axes=data_axes, remat=tc.remat)
+        ce, n_tok = chunked_cross_entropy(x, head, labels, tc.ce_chunk,
+                                          tc.z_weight)
+    else:
+        logits, aux = Mdl.forward(
+            cfg, params, batch["tokens"], mode="train",
+            vision_embeds=batch.get("vision_embeds"), mesh=mesh,
+            data_axes=data_axes, remat=tc.remat)
+        ce, n_tok = cross_entropy(logits, labels, tc.z_weight)
+    total = ce + tc.aux_weight * aux
+    return total, {"ce": ce, "aux": aux, "n_tok": n_tok}
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: AdamWState
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, kids: TrainState(params=kids[0], opt=kids[1]),
+)
+
+
+def init_state(cfg: ArchConfig, key, dtype=jnp.float32) -> TrainState:
+    params = Mdl.init_params(cfg, key, dtype)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def train_step(cfg: ArchConfig, tc: TrainConfig, state: TrainState,
+               batch: Dict[str, jnp.ndarray], mesh=None,
+               data_axes=("data",),
+               grad_shardings=None,
+               grad_transform=None) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+    """One optimizer step.  With tc.microbatches > 1, the global batch is
+    split on the batch axis and gradients are accumulated with a lax.scan —
+    the standard memory/throughput trade (and the unit XLA's latency-hiding
+    scheduler overlaps the gradient all-reduce against).
+
+    ``grad_shardings``: optional pytree of Shardings (same structure as
+    params).  Pinning grads to the params' sharding forces the partitioner
+    to emit the grad dots in param layout — without it, the embed/lm_head
+    grad dot may pick the activation layout and all-gather full-vocab
+    dlogits (tens of GB/device)."""
+
+    def constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, tc, p, b, mesh, data_axes), has_aux=True)
+
+    if tc.microbatches <= 1:
+        (loss, metrics), grads = grad_fn(state.params, batch)
+        grads = constrain(grads)
+    else:
+        m = tc.microbatches
+        b = batch["tokens"].shape[0]
+        assert b % m == 0, (b, m)
+
+        def split(x):
+            return x.reshape(m, b // m, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_body(carry, mb):
+            g_acc, l_acc = carry
+            (l, met), g = grad_fn(state.params, mb)
+            g_acc = jax.tree.map(jnp.add, g_acc, constrain(g))
+            return (g_acc, l_acc + l), met
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            state.params)
+        (grads, loss), mets = jax.lax.scan(acc_body, (zero, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / m, grads)
+        loss = loss / m
+        metrics = jax.tree.map(lambda x: x[-1], mets)
+
+    if grad_transform is not None:
+        # e.g. int8 ring all-reduce over the pod axis (repro.train.pod_compress)
+        grads = grad_transform(grads)
+    new_params, new_opt, gnorm = adamw_update(
+        tc.optimizer, grads, state.opt, state.params)
+    metrics = dict(metrics)
+    metrics.update(loss=loss, grad_norm=gnorm)
+    return TrainState(params=new_params, opt=new_opt), metrics

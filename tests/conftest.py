@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own 512-device env
+# in a separate process); make the src/ tree importable regardless of cwd.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

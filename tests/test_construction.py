@@ -1,0 +1,42 @@
+"""Ring constructors: validity, determinism, jax/host agreement."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.construction import (default_num_rings, greedy_ring, k_rings,
+                                     nearest_ring, nearest_ring_jax,
+                                     random_ring)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 40), st.integers(0, 10_000))
+def test_nearest_ring_is_permutation_and_matches_jax(n, seed):
+    w = topology.make_latency("uniform", n, seed=seed)
+    start = seed % n
+    host = nearest_ring(w, start)
+    assert sorted(host) == list(range(n))
+    dev = np.asarray(nearest_ring_jax(jnp.asarray(w), jnp.int32(start)))
+    assert np.array_equal(host, dev)
+
+
+def test_greedy_ring_respects_score():
+    w = topology.make_latency("gaussian", 12, seed=0)
+    # score = -w  => nearest neighbour
+    perm = greedy_ring(w, lambda w_, vis, cur, p: -w_[cur], start=3)
+    assert np.array_equal(perm, nearest_ring(w, 3))
+
+
+def test_k_rings_mixed():
+    w = topology.make_latency("uniform", 16, seed=1)
+    rng = np.random.default_rng(0)
+    rings = k_rings(w, 4, kind="mixed:2", rng=rng)
+    assert len(rings) == 4
+    for r in rings:
+        assert sorted(r) == list(range(16))
+
+
+def test_default_num_rings():
+    assert default_num_rings(2) == 1
+    assert default_num_rings(256) == 8
+    assert default_num_rings(1000) == 10

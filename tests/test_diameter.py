@@ -1,0 +1,84 @@
+"""Diameter/APSP: JAX min-plus vs scipy oracle vs networkx; invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.construction import nearest_ring, random_ring
+from repro.core.diameter import (INF, adjacency_from_rings, apsp, diameter,
+                                 diameter_scipy, ring_edges)
+
+
+def _ring_adj(n=20, k=2, seed=0, dist="uniform"):
+    w = topology.make_latency(dist, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    rings = [random_ring(rng, n) for _ in range(k)]
+    return w, adjacency_from_rings(w, rings)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "gaussian", "fabric", "bitnode"])
+@pytest.mark.parametrize("n", [8, 21, 50])
+def test_jax_matches_scipy(dist, n):
+    w, adj = _ring_adj(n=n, seed=n, dist=dist)
+    assert float(diameter(jnp.asarray(adj))) == pytest.approx(
+        diameter_scipy(adj), rel=1e-5)
+
+
+def test_matches_networkx():
+    import networkx as nx
+    w, adj = _ring_adj(n=24, seed=3)
+    g = nx.Graph()
+    for i in range(24):
+        for j in range(i + 1, 24):
+            if adj[i, j] < float(INF) / 2:
+                g.add_edge(i, j, weight=float(adj[i, j]))
+    want = nx.diameter(g, weight="weight")  # eccentricity-based
+    lengths = dict(nx.all_pairs_dijkstra_path_length(g, weight="weight"))
+    want = max(max(d.values()) for d in lengths.values())
+    assert float(diameter(jnp.asarray(adj))) == pytest.approx(want, rel=1e-5)
+
+
+def test_disconnected_uses_largest_component():
+    w = topology.make_latency("uniform", 10, seed=0)
+    # component A: ring over 0..5; component B: edge 6-7; 8, 9 isolated
+    edges = list(ring_edges(np.arange(6))) + [(6, 7)]
+    from repro.core.diameter import adjacency_from_edges
+    adj = adjacency_from_edges(w, edges)
+    d = float(diameter(jnp.asarray(adj)))
+    assert d < float(INF) / 2
+    assert d == pytest.approx(diameter_scipy(adj), rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(6, 24), st.integers(0, 10_000))
+def test_apsp_properties(n, seed):
+    """APSP output: zero diagonal, symmetric, triangle inequality, and
+    monotone non-increasing under edge addition."""
+    w, adj = _ring_adj(n=n, seed=seed, k=1)
+    d = np.asarray(apsp(jnp.asarray(adj)))
+    assert np.allclose(np.diag(d), 0.0)
+    assert np.allclose(d, d.T, atol=1e-3)
+    # triangle inequality on finite entries
+    fin = d < float(INF) / 2
+    for _ in range(20):
+        i, j, k = np.random.default_rng(seed).integers(0, n, 3)
+        if fin[i, j] and fin[j, k] and fin[i, k]:
+            assert d[i, k] <= d[i, j] + d[j, k] + 1e-3
+    # adding a ring can only reduce the diameter
+    rng = np.random.default_rng(seed + 1)
+    adj2 = adjacency_from_rings(w, [random_ring(rng, n)])
+    both = np.minimum(adj, adj2)
+    assert float(diameter(jnp.asarray(both))) <= float(
+        diameter(jnp.asarray(adj))) + 1e-3
+
+
+def test_nearest_ring_not_worse_than_random_on_clustered():
+    """On geographically clustered latencies the nearest ring usually has a
+    smaller total weight; the diameter claim is what the paper's selection
+    exploits (either may win — just check both produce valid diameters)."""
+    w = topology.make_latency("fabric", 40, seed=1)
+    rng = np.random.default_rng(0)
+    d_near = diameter_scipy(adjacency_from_rings(w, [nearest_ring(w, 0)]))
+    d_rand = diameter_scipy(adjacency_from_rings(w, [random_ring(rng, 40)]))
+    assert d_near > 0 and d_rand > 0

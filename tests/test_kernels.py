@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.minplus.ops import minplus
+from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# --- minplus ---------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (64, 100, 36),
+                                   (256, 128, 384), (13, 17, 29), (1, 1, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_minplus_shapes(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    a = jnp.asarray(rng.uniform(0, 10, (m, k)).astype(dtype))
+    b = jnp.asarray(rng.uniform(0, 10, (k, n)).astype(dtype))
+    got = minplus(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(minplus_ref(a.astype(jnp.float32),
+                                                      b.astype(jnp.float32))),
+                               rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 80), st.integers(2, 80), st.integers(0, 10**6))
+def test_minplus_property(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0, 100, (m, n)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 100, (n, m)).astype(np.float32))
+    got = np.asarray(minplus(a, b, interpret=True))
+    want = np.asarray(minplus_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_minplus_apsp_integration():
+    """The kernel plugged into the APSP loop gives scipy's diameter."""
+    from repro.core.diameter import apsp, diameter_scipy, adjacency_from_rings
+    from repro.core.topology import make_latency
+    from repro.core.construction import random_ring
+    w = make_latency("uniform", 40, seed=7)
+    adj = adjacency_from_rings(w, [random_ring(np.random.default_rng(0), 40)])
+    d_kernel = np.asarray(apsp(jnp.asarray(adj), use_kernel=True))
+    assert float(d_kernel.max()) == pytest.approx(diameter_scipy(adj), rel=1e-5)
+
+
+# --- flash attention --------------------------------------------------------
+
+CASES = [
+    dict(b=1, hq=2, hkv=2, tq=128, tk=128, d=128, causal=True, window=None),
+    dict(b=2, hq=4, hkv=2, tq=256, tk=256, d=64, causal=True, window=None),
+    dict(b=1, hq=4, hkv=1, tq=200, tk=200, d=80, causal=True, window=96),
+    dict(b=1, hq=2, hkv=2, tq=128, tk=384, d=128, causal=False, window=None),
+    dict(b=1, hq=8, hkv=2, tq=64, tk=64, d=32, causal=True, window=32),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_sweep(case, dtype, tol):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (case["b"], case["hq"], case["tq"],
+                                      case["d"]))).astype(dtype)
+    k = jnp.asarray(rng.normal(0, 1, (case["b"], case["hkv"], case["tk"],
+                                      case["d"]))).astype(dtype)
+    v = jnp.asarray(rng.normal(0, 1, (case["b"], case["hkv"], case["tk"],
+                                      case["d"]))).astype(dtype)
+    got = flash_attention(q, k, v, causal=case["causal"],
+                          window=case["window"], interpret=True)
+    want = attention_ref(q, k, v, causal=case["causal"], window=case["window"])
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    assert err < tol, (case, dtype, err)
+
+
+def test_chunked_attention_matches_ref():
+    from repro.models.layers import _chunked_attention
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (2, 4, 4096, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 4096, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 4096, 32)).astype(np.float32))
+    for w in (None, 512):
+        got = _chunked_attention(q, k, v, window=w)
+        want = attention_ref(q, k, v, causal=True, window=w)
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+# --- fused rmsnorm -----------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 7, 96), (256, 1152), (1, 8)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6), (jnp.bfloat16, 2e-2)])
+def test_rmsnorm_kernel(shape, dtype, tol):
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 2, shape)).astype(dtype)
+    s = jnp.asarray(rng.normal(0, 0.1, shape[-1:])).astype(dtype)
+    got = rmsnorm(x, s, interpret=True)
+    want = rmsnorm_ref(x, s)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    assert err < tol, (shape, dtype, err)
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.models.layers import rms_norm
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (5, 128)).astype(np.float32))
+    s = jnp.asarray(rng.normal(0, 0.1, (128,)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, s, interpret=True)),
+                               np.asarray(rms_norm(x, s)), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,54 @@
+"""DGRO device-order integration (launch.mesh) — numpy-level tests plus a
+subprocess mesh-construction check."""
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro.launch.mesh import dgro_host_order, model_dcn_latency
+
+
+def test_model_dcn_latency_structure():
+    lat = model_dcn_latency(32, n_pods=2, seed=0)
+    assert lat.shape == (32, 32)
+    assert np.allclose(lat, lat.T)
+    assert np.allclose(np.diag(lat), 0)
+    # cross-pod latencies dominate intra-pod
+    intra = lat[:16, :16][np.triu_indices(16, 1)]
+    cross = lat[:16, 16:]
+    assert cross.mean() > 2 * intra.mean()
+
+
+def test_dgro_host_order_improves_ring():
+    lat = model_dcn_latency(32, n_pods=2, seed=1)
+    order, report = dgro_host_order(lat)
+    assert sorted(order) == list(range(32))
+    d_dgro = diameter_scipy(adjacency_from_rings(lat, [np.asarray(order)]))
+    assert d_dgro == report["diameter"]
+    assert report["diameter"] <= report["random_diameter"] + 1e-9
+
+
+def test_make_production_mesh_shapes():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert dict(m1.shape) == {"data": 16, "model": 16}, m1.shape
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}, m2.shape
+m3 = make_production_mesh(multi_pod=True, dgro_order=True)
+assert dict(m3.shape) == {"pod": 2, "data": 16, "model": 16}
+assert hasattr(m3, "dgro_report")
+# DGRO order must be a permutation of the same device set
+d_base = {d.id for d in m2.devices.flat}
+d_dgro = {d.id for d in m3.devices.flat}
+assert d_base == d_dgro
+print("OK", m3.dgro_report["selected"], round(m3.dgro_report["diameter"], 1))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={"PYTHONPATH": "src",
+                                         "PATH": "/usr/bin:/bin"},
+                         cwd=".", timeout=300)
+    assert "OK" in out.stdout, out.stderr[-2000:]

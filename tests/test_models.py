@@ -1,0 +1,113 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models import model as Mdl
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_forward_and_train_step(name):
+    cfg = ARCHS[name].smoke()
+    params = Mdl.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    vis = None
+    if cfg.frontend == "vision":
+        vis = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.n_patches, cfg.d_model))
+    logits, aux = Mdl.forward(cfg, params, toks, mode="train",
+                              vision_embeds=vis)
+    exp_s = S + (cfg.n_patches if vis is not None else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one train step: loss finite, params move
+    from repro.train.train_step import TrainConfig, init_state, train_step
+    tc = TrainConfig(remat=False, microbatches=1)
+    state = init_state(cfg, jax.random.PRNGKey(3))
+    batch = {"tokens": toks, "labels": toks}
+    if vis is not None:
+        batch["vision_embeds"] = vis
+    new_state, metrics = train_step(cfg, tc, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(new_state.params),
+                        jax.tree.leaves(state.params)))
+    assert moved
+
+
+@pytest.mark.parametrize("name", ["qwen1.5-4b", "gemma3-1b",
+                                  "falcon-mamba-7b", "zamba2-7b",
+                                  "moonshot-v1-16b-a3b"])
+def test_prefill_decode_matches_train_forward(name):
+    cfg = dataclasses.replace(ARCHS[name].smoke(), capacity_factor=16.0)
+    params = Mdl.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 3), 0, cfg.vocab)
+    full, _ = Mdl.forward(cfg, params, toks, mode="train")
+    caches = Mdl.init_caches(cfg, B, max_len=64)
+    lp, caches, _ = Mdl.forward(cfg, params, toks[:, :S], mode="prefill",
+                                caches=caches)
+    errs = [float(jnp.max(jnp.abs(lp - Mdl.forward(
+        cfg, params, toks[:, :S], mode="train")[0][:, -1])))]
+    for t in range(S, S + 3):
+        ld, caches = Mdl.forward(cfg, params, toks[:, t:t + 1], mode="decode",
+                                 caches=caches, pos=jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(ld - full[:, t]))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_gemma_pattern_scan_vs_unrolled():
+    """Pattern-period scan (blocks of 6) must equal a naive unrolled stack:
+    verified indirectly — remainder layers get the correct per-position kind."""
+    cfg = ARCHS["gemma3-1b"].smoke()   # 12 layers, period 6 -> 2 blocks
+    assert Mdl.pattern_period(cfg) == 6
+    kinds = [Mdl.layer_kind(cfg, j) for j in range(6)]
+    assert [k["window"] is None for k in kinds] == [False] * 5 + [True]
+
+
+def test_moe_drop_rate_reasonable():
+    """With untrained (roughly uniform) routing, capacity 1.25 should drop
+    only a few percent of tokens."""
+    from repro.models.moe import init_moe, moe_apply, _capacity
+    cfg = ARCHS["moonshot-v1-16b-a3b"].smoke()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model))
+    y, probs = moe_apply(p, x, cfg)
+    # tokens that got zero output = fully dropped (both experts over capacity)
+    zero_rows = float(jnp.mean(jnp.all(y == 0, axis=-1)))
+    assert zero_rows < 0.2
+
+
+def test_fp8_kv_cache_decode_close():
+    """fp8 KV cache (serving memory optimization, §Perf): decode logits stay
+    close to the bf16-cache path."""
+    cfg = ARCHS["granite-8b"].smoke()
+    params = Mdl.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 2), 0, cfg.vocab)
+    ref_caches = Mdl.init_caches(cfg, B, 64, jnp.float32)
+    f8_caches = Mdl.init_caches(cfg, B, 64, jnp.float8_e4m3fn)
+    lr, ref_caches, _ = Mdl.forward(cfg, params, toks[:, :S], mode="prefill",
+                                    caches=ref_caches)
+    l8, f8_caches, _ = Mdl.forward(cfg, params, toks[:, :S], mode="prefill",
+                                   caches=f8_caches)
+    errs = [float(jnp.max(jnp.abs(lr - l8)))]
+    for t in range(S, S + 2):
+        dr, ref_caches = Mdl.forward(cfg, params, toks[:, t:t + 1],
+                                     mode="decode", caches=ref_caches,
+                                     pos=jnp.int32(t))
+        d8, f8_caches = Mdl.forward(cfg, params, toks[:, t:t + 1],
+                                    mode="decode", caches=f8_caches,
+                                    pos=jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(dr - d8))))
+    # fp8 e4m3 carries ~2 significant digits; logits of a random-init smoke
+    # model are O(1)
+    assert max(errs) < 0.7, errs
+    assert float(jnp.mean(jnp.abs(dr - d8))) < 0.1

@@ -1,0 +1,53 @@
+"""DQN components: embedding forward, TD update, end-to-end improvement."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.construction import random_ring
+from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro.core.embedding import init_qparams, q_values
+from repro.core.qlearning import (DQNConfig, ReplayBuffer, construct_ring_dqn,
+                                  train_dqn)
+from repro.core.topology import make_latency
+
+
+def test_q_values_shape_finite():
+    params = init_qparams(jax.random.PRNGKey(0), p=8, h=16)
+    w = jnp.asarray(make_latency("uniform", 10, seed=0))
+    adj = jnp.zeros((10, 10))
+    q = q_values(params, w, adj, jnp.int32(0))
+    assert q.shape == (10,)
+    assert bool(jnp.all(jnp.isfinite(q)))
+    # embedding must depend on the partial topology
+    adj2 = adj.at[0, 3].set(1.0).at[3, 0].set(1.0)
+    q2 = q_values(params, w, adj2, jnp.int32(0))
+    assert float(jnp.max(jnp.abs(q - q2))) > 0
+
+
+def test_replay_buffer_wraps():
+    buf = ReplayBuffer(capacity=8, n=5)
+    w = np.zeros((5, 5), np.float32)
+    a = np.zeros((5, 5), np.uint8)
+    for i in range(11):
+        buf.push(w, a, 0, 1, float(i), a, 1, np.zeros(5, np.uint8), False)
+    assert buf.size == 8
+    rng = np.random.default_rng(0)
+    batch = buf.sample(rng, 4)
+    assert batch[0].shape == (4, 5, 5)
+
+
+def test_dqn_training_improves_over_random():
+    cfg = DQNConfig(n=12, k_rings=2, epochs=30, eps_decay=15, batch_size=16,
+                    buffer_capacity=4000, seed=1)
+    params, log = train_dqn(cfg, eval_every=10)
+    w = make_latency("uniform", 12, seed=777)
+    rng = np.random.default_rng(0)
+    _, d_dqn = construct_ring_dqn(params, cfg, w, rng)
+    d_rand = np.mean([
+        diameter_scipy(adjacency_from_rings(
+            w, [random_ring(np.random.default_rng(s), 12) for _ in range(2)]))
+        for s in range(5)])
+    # trained greedy construction should at least match the random mean
+    assert d_dqn <= d_rand * 1.15, (d_dqn, d_rand)
+    # learning signal exists: test diameter not increasing overall
+    assert min(log.test_diam) <= log.test_diam[0] + 1e-6

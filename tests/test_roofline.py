@@ -1,0 +1,129 @@
+"""Roofline derivation: HLO collective parser + term arithmetic."""
+import pytest
+
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Collective,
+                                     parse_collectives, roofline_from)
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,4096]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true
+  %ag = bf16[32,1024]{1,0} all-gather(%y), channel_id=2, replica_groups=[4,8]<=[32], dimensions={1}
+  %rs = f32[8,128]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[2,4]<=[8], dimensions={0}
+  %cp = bf16[64]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1},{1,2}}
+  %a2a = f32[16,16]{1,0} all-to-all(%v), channel_id=5, replica_groups={{0,1,2,3}}, dimensions={0}
+  %ags = (bf16[8,8]{1,0}, bf16[8,64]{1,0}) all-gather-start(%u), channel_id=6, replica_groups=[1,8]<=[8], dimensions={1}
+  %dot = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_parse_collectives_ops_and_groups():
+    colls = parse_collectives(HLO)
+    by_op = {}
+    for c in colls:
+        by_op.setdefault(c.op, []).append(c)
+    assert len(by_op["all-reduce"]) == 1
+    ar = by_op["all-reduce"][0]
+    assert ar.group_size == 16
+    assert ar.result_bytes == 16 * 4096 * 4
+    assert ar.transfer_bytes == pytest.approx(2 * ar.result_bytes * 15 / 16)
+
+    ag = by_op["all-gather"][0]
+    assert ag.group_size == 8
+    assert ag.result_bytes == 32 * 1024 * 2
+    assert ag.transfer_bytes == pytest.approx(ag.result_bytes * 7 / 8)
+
+    rs = by_op["reduce-scatter"][0]
+    assert rs.group_size == 4
+    assert rs.transfer_bytes == pytest.approx(8 * 128 * 4 * 3)
+
+    cp = by_op["collective-permute"][0]
+    assert cp.transfer_bytes == 64 * 2
+
+    a2a = by_op["all-to-all"][0]
+    assert a2a.group_size == 4          # brace-style replica_groups
+
+    # async start op: tuple result, max shape = gathered output
+    starts = [c for c in colls if c.op == "all-gather"]
+    assert len(starts) == 2
+    assert starts[1].result_bytes == 8 * 64 * 2
+
+    # the dot must NOT be picked up
+    assert all(c.op != "dot" for c in colls)
+
+
+def test_roofline_terms_and_dominant():
+    cost = {"flops": PEAK_FLOPS * 0.5, "bytes accessed": HBM_BW * 2.0}
+    roof = roofline_from(cost, HLO)
+    assert roof.compute_s == pytest.approx(0.5)
+    assert roof.memory_s == pytest.approx(2.0)
+    assert roof.dominant == "memory"
+    assert roof.collective_s == pytest.approx(roof.collective_bytes / ICI_BW)
+    assert roof.n_collectives == 6
+
+
+def test_active_param_count_moe():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.models import model as Mdl
+    from repro.roofline.analysis import active_param_count
+
+    cfg = get_arch("moonshot-v1-16b-a3b").smoke()
+    shapes = jax.eval_shape(
+        lambda: Mdl.init_params(cfg, jax.random.PRNGKey(0), jnp.float32))
+    total = sum(int(l.size) for l in jax.tree.leaves(shapes))
+    active = active_param_count(cfg, shapes)
+    assert active < total
+    # top-2 of 8 experts: expert share should shrink ~4x
+    assert active > total * 0.2
+
+
+def test_hlo_walk_counts_loop_trips():
+    """The trip-aware walk must count a lax.scan body trip_count times —
+    XLA's own cost_analysis counts it once (the bug the walk fixes)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.roofline.hlo_walk import walk
+
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((64,), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return w @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    def unrolled(x, w):
+        for _ in range(7):
+            x = w @ x
+        return x
+
+    f_scan = walk(jax.jit(scanned).lower(x, w).compile().as_text())
+    f_unr = walk(jax.jit(unrolled).lower(x, w).compile().as_text())
+    truth = 7 * 2 * 64 * 64
+    assert f_scan.dot_flops == truth
+    assert f_unr.dot_flops == truth
+    assert f_scan.n_while == 1 and f_scan.max_trip == 7
+
+
+def test_hlo_walk_nested_loops():
+    import jax
+    import jax.numpy as jnp
+    from repro.roofline.hlo_walk import walk
+
+    w = jnp.zeros((32, 32), jnp.float32)
+    x = jnp.zeros((32,), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, _):
+            def inner(d, _):
+                return w @ d, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    f = walk(jax.jit(nested).lower(x, w).compile().as_text())
+    assert f.dot_flops == 5 * 3 * 2 * 32 * 32, f.dot_flops

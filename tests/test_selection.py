@@ -1,0 +1,47 @@
+"""Algorithm 3 + rho-based adaptive ring selection (§V)."""
+import numpy as np
+import pytest
+
+from repro.core import protocols
+from repro.core.diameter import diameter_scipy
+from repro.core.selection import (adapt_overlay, clustering_ratio,
+                                  measure_latency_stats, select_ring_kind)
+from repro.core.topology import make_latency
+
+
+def test_chord_rho_high_perigee_rho_low():
+    """Paper: Chord's random ring has rho ~ 1; Perigee's nearest-neighbour
+    overlay has rho ~ 0."""
+    w = make_latency("bitnode", 80, seed=0)
+    rng = np.random.default_rng(0)
+    chord_adj, _ = protocols.chord(w, rng)
+    peri_adj, _ = protocols.perigee(w, rng)
+    rho_c = clustering_ratio(measure_latency_stats(w, chord_adj, seed=0))
+    rho_p = clustering_ratio(measure_latency_stats(w, peri_adj, seed=0))
+    assert rho_c > 0.6, rho_c
+    assert rho_p < 0.4, rho_p
+    assert select_ring_kind(rho_c) == "nearest"
+    assert select_ring_kind(rho_p) == "random"
+
+
+def test_gossip_aggregation_converges_to_mean():
+    w = make_latency("uniform", 40, seed=1)
+    rng = np.random.default_rng(0)
+    adj, _ = protocols.rapid(w, rng)
+    s_few = measure_latency_stats(w, adj, gossip_rounds=60, seed=0)
+    # direct averages (no gossip) as ground truth via many rounds
+    assert s_few.l_global > s_few.l_min
+    assert s_few.l_local > 0
+
+
+def test_adapt_overlay_improves_chord():
+    """Adding the selected ring must not hurt, and usually helps, the
+    diameter (paper Figs. 5/11/15)."""
+    w = make_latency("fabric", 60, seed=2)
+    rng = np.random.default_rng(0)
+    adj, _ = protocols.chord(w, rng)
+    d0 = diameter_scipy(adj)
+    new_adj, kind, rho = adapt_overlay(w, adj, seed=0)
+    d1 = diameter_scipy(new_adj)
+    assert kind in ("nearest", "random", "keep")
+    assert d1 <= d0 + 1e-9, (d0, d1)
