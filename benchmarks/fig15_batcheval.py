@@ -1,0 +1,104 @@
+"""Batched topology-evaluation throughput: batcheval vs per-candidate loops.
+
+Sweeps batch size B and graph size N; for each cell, scores B random K-ring
+genomes end to end (ring permutations -> overlay adjacency -> diameter),
+three ways:
+
+  * ``loop-scipy``  — per-candidate ``adjacency_from_rings`` + host Dijkstra
+                      (``diameter_scipy``): exactly the path the GA /
+                      selection / parallel consumers used before batcheval;
+  * ``loop-jax``    — per-candidate assembly + jit'd ``diameter`` (one
+                      device call per candidate);
+  * ``batched``     — vectorized ``adjacency_batch_from_rings`` + ONE
+                      ``batcheval.diameters`` call over the (B, N, N) stack.
+
+Reports evaluations/second and the batched speedup over the scipy loop.
+The acceptance gate for this figure is >= 5x at (B=64, N=64) on CPU; the
+returned ``passes_gate`` flag is enforced by ``benchmarks.run`` (a False
+gate fails the sweep).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import batcheval
+from repro.core.diameter import (adjacency_from_rings, diameter,
+                                 diameter_scipy)
+from repro.core.topology import make_latency
+
+
+def _bench(fn, repeats: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(bs=(1, 8, 64, 256), ns=(32, 64, 256), k_rings: int = 2,
+        seed: int = 0, scipy_cap: int = 64):
+    """Returns the harness row; prints one CSV line per (B, N) cell.
+
+    ``scipy_cap`` bounds how many candidates the per-candidate loops
+    actually time (extrapolated linearly beyond) so the slow baselines do
+    not dominate wall-clock at B=256.
+    """
+    t0 = time.time()
+    rng = np.random.default_rng(seed)
+    print("B,N,evals_per_s_loop_scipy,evals_per_s_loop_jax,evals_per_s_batched,"
+          "speedup_vs_scipy_loop")
+    gate = None
+    rows = 0
+    for n in ns:
+        w = make_latency("uniform", n, seed=seed + n)
+        for b in bs:
+            genomes = np.stack(
+                [[rng.permutation(n) for _ in range(k_rings)]
+                 for _ in range(b)])
+
+            def eval_loop_scipy(m):
+                return [diameter_scipy(adjacency_from_rings(w, list(genomes[i])))
+                        for i in range(m)]
+
+            def eval_loop_jax(m):
+                return [float(diameter(jnp.asarray(
+                    adjacency_from_rings(w, list(genomes[i])))))
+                    for i in range(m)]
+
+            def eval_batched():
+                return np.asarray(batcheval.diameters_of_rings(w, genomes))
+
+            m = min(b, scipy_cap)
+            t_scipy = _bench(lambda: eval_loop_scipy(m)) * (b / m)
+            t_jax = _bench(lambda: eval_loop_jax(m)) * (b / m)
+            eval_batched()                                 # warm the jit cache
+            t_batch = _bench(eval_batched)
+
+            speedup = t_scipy / t_batch
+            if (b, n) == (64, 64):
+                gate = speedup
+            rows += 1
+            print(f"{b},{n},{b / t_scipy:.0f},{b / t_jax:.0f},"
+                  f"{b / t_batch:.0f},{speedup:.1f}x")
+    wall = time.time() - t0
+    derived = (f"B=64 N=64 speedup {gate:.1f}x vs per-candidate scipy loop"
+               if gate is not None else "gate cell not swept")
+    return {"name": "fig15_batcheval",
+            "us_per_call": wall * 1e6 / max(1, rows),
+            "derived": derived,
+            "passes_gate": gate is None or gate >= 5.0}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bs", type=int, nargs="+", default=[1, 8, 64, 256])
+    ap.add_argument("--ns", type=int, nargs="+", default=[32, 64, 128, 256])
+    ap.add_argument("--k-rings", type=int, default=2)
+    args = ap.parse_args()
+    print(run(tuple(args.bs), tuple(args.ns), args.k_rings))

@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks import (fig09_training_curve, fig10_dgro_vs_ga,
                             fig11_ring_selection, fig12_ring_ablation,
                             fig13_kring_compare, fig14_parallel,
-                            roofline_table)
+                            fig15_batcheval, roofline_table)
 
     fast = args.fast
     jobs = [
@@ -52,6 +52,10 @@ def main() -> None:
             ga_budget=100 if fast else 300)),
         ("fig14", lambda: fig14_parallel.run(
             "uniform", 64 if fast else 256)),
+        ("fig15-batcheval", lambda: fig15_batcheval.run(
+            bs=(1, 8, 64) if fast else (1, 8, 64, 256),
+            ns=(32, 64) if fast else (32, 64, 128, 256),
+            scipy_cap=16 if fast else 64)),
         ("fig18-bitnode", lambda: fig14_parallel.run(
             "bitnode", 64 if fast else 256)),
         ("roofline", roofline_table.run),
@@ -67,7 +71,14 @@ def main() -> None:
             else:
                 with contextlib.redirect_stdout(buf):
                     res = fn()
-            print(f"{res['name']},{res['us_per_call']:.1f},{res['derived']}")
+            # hard gates opt in via 'passes_gate' (fig15's >=5x throughput
+            # claim); soft 'holds'/'improves' flags stay informational
+            if res.get("passes_gate", True):
+                print(f"{res['name']},{res['us_per_call']:.1f},{res['derived']}")
+            else:
+                failures += 1
+                print(f"{res['name']},{res['us_per_call']:.1f},"
+                      f"GATE FAILED: {res['derived']}")
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR {e!r}")

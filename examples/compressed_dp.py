@@ -12,7 +12,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np                      # noqa: E402
 import jax                              # noqa: E402
 import jax.numpy as jnp                 # noqa: E402
-from jax import shard_map               # noqa: E402
+from repro.compat import make_mesh, shard_map  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_arch      # noqa: E402
@@ -25,8 +25,7 @@ from repro.train.train_step import cross_entropy  # noqa: E402
 
 def main():
     n_hosts = 8
-    mesh = jax.make_mesh((n_hosts,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n_hosts,), ("data",))
     cfg = get_arch("musicgen-large").smoke()
     params = Mdl.init_params(cfg, jax.random.PRNGKey(0))
     opt_cfg = AdamWConfig(lr=2e-3)

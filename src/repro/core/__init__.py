@@ -3,6 +3,8 @@
 Submodules:
   topology      — the four latency distributions of §VII-A
   diameter      — min-plus APSP (JAX/Pallas) + scipy oracle, largest-CC rule
+  batcheval     — batched (B, N, N) diameter engine (vmapped APSP, one
+                  device call per candidate batch; chunked for memory)
   construction  — Algorithm 1 ring constructors (random/nearest/greedy/K-ring)
   embedding     — Eqns 2-4 graph embedding + Q-head (structure2vec style)
   qlearning     — Algorithm 2 DQN with replay (episodes on host, math jit'd)
@@ -11,6 +13,7 @@ Submodules:
   ga            — genetic-algorithm and random-search baselines (§VII-A.2)
   protocols     — Chord / RAPID / Perigee baseline overlays (§V-A)
 """
-from . import construction, diameter, ga, protocols, selection, topology  # noqa: F401
+from . import (batcheval, construction, diameter, ga, protocols, selection,  # noqa: F401
+               topology)
 
 # embedding/qlearning/parallel import jax-heavy deps; import lazily where used.

@@ -1,0 +1,261 @@
+"""Batched topology evaluation — the bulk diameter/APSP engine.
+
+Everything DGRO measures (GA populations, candidate ring selection,
+partitioned construction, design-space sweeps) reduces to "score many
+candidate overlays by diameter".  This module stacks candidates as a
+``(B, N, N)`` adjacency tensor and computes all diameters in ONE jit'd
+device call: a batched APSP (vmapped min-plus squaring on TPU, vectorized
+Floyd-Warshall on CPU — see ``batched_apsp``) followed by the paper's
+largest-connected-component diameter rule (§IV-C), per batch element.
+
+Layout of the module:
+
+* graph assembly — ``rings_to_edges`` / ``adjacency_batch_from_edges`` /
+  ``adjacency_batch_from_rings`` build the (B, N, N) tensor with vectorized
+  numpy scatters (no per-edge Python loops); ``overlay_with_rings`` fuses a
+  base overlay with B candidate rings; ``pad_adjacency_blocks`` pads
+  variable-size blocks into one batch (padded nodes are isolated singleton
+  components, which the largest-CC rule ignores).
+* device compute — ``batched_apsp`` / ``batched_diameter`` are jit'd over
+  the whole batch; on TPU the inner min-plus step is the batched Pallas
+  kernel (grid over the batch axis), on CPU the vmapped jnp oracle.
+* host facade — ``diameters`` / ``diameters_of_rings`` bound peak memory by
+  folding oversized batches into a ``lax.map`` over fixed-size chunks, so a
+  100k-candidate GA budget never materializes a B*N^3 broadcast temporary,
+  while still issuing a single device call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .diameter import INF, largest_cc_diameter
+
+__all__ = [
+    "rings_to_edges",
+    "adjacency_batch_from_edges",
+    "adjacency_batch_from_rings",
+    "overlay_with_rings",
+    "pad_adjacency_blocks",
+    "batched_apsp",
+    "batched_diameter",
+    "diameters",
+    "diameters_of_rings",
+]
+
+
+# ---------------------------------------------------------------------------
+# graph assembly (host, vectorized)
+# ---------------------------------------------------------------------------
+
+def rings_to_edges(genomes) -> np.ndarray:
+    """``(B, K, N)`` ring permutations -> ``(B, K*N, 2)`` edge lists.
+
+    Accepts a (B, K, N) array, a (B, N) array (K=1), or a nested list of
+    per-genome ring permutations.
+    """
+    g = np.asarray(genomes, dtype=np.intp)
+    if g.ndim == 2:
+        g = g[:, None, :]
+    assert g.ndim == 3, g.shape
+    nxt = np.roll(g, -1, axis=-1)
+    return np.stack([g, nxt], axis=-1).reshape(g.shape[0], -1, 2)
+
+
+def adjacency_batch_from_edges(w: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """Batch of weighted adjacencies from per-candidate edge lists.
+
+    ``edges`` is (B, E, 2); returns (B, N, N) float32 with INF on non-edges
+    and 0 diagonal.  The scatter is one ``np.minimum.at`` over both edge
+    directions, so duplicate/parallel edges resolve to the min weight
+    exactly like the scalar loop in ``diameter.adjacency_from_edges``.
+    """
+    w = np.asarray(w)
+    n = w.shape[0]
+    e = np.asarray(edges, dtype=np.intp)
+    assert e.ndim == 3 and e.shape[-1] == 2, e.shape
+    b = e.shape[0]
+    d = np.full((b, n, n), float(INF), dtype=np.float32)
+    d[:, np.arange(n), np.arange(n)] = 0.0
+    if e.shape[1]:
+        bi = np.broadcast_to(np.arange(b)[:, None], e.shape[:2])
+        u, v = e[..., 0], e[..., 1]
+        np.minimum.at(d, (bi, u, v), w[u, v].astype(np.float32))
+        np.minimum.at(d, (bi, v, u), w[v, u].astype(np.float32))
+    return d
+
+
+def adjacency_batch_from_rings(w: np.ndarray, genomes) -> np.ndarray:
+    """(B, K, N) ring permutations -> (B, N, N) union-of-rings adjacencies."""
+    return adjacency_batch_from_edges(w, rings_to_edges(genomes))
+
+
+def overlay_with_rings(adj: np.ndarray, w: np.ndarray, rings) -> np.ndarray:
+    """B candidate overlays: the base ``adj`` each augmented with one ring."""
+    cand = adjacency_batch_from_rings(w, rings)
+    return np.minimum(np.asarray(adj, np.float32)[None], cand)
+
+
+def pad_adjacency_blocks(blocks: Sequence[np.ndarray]) -> np.ndarray:
+    """Pad variable-size adjacencies to one (B, N_max, N_max) batch.
+
+    Padded nodes are isolated (INF rows/cols, 0 diagonal): each is a
+    singleton component, so the largest-CC diameter of the padded graph
+    equals the block's own diameter whenever the block has >= 1 node.
+    """
+    blocks = [np.asarray(b, np.float32) for b in blocks]
+    n_max = max(b.shape[0] for b in blocks)
+    out = np.full((len(blocks), n_max, n_max), float(INF), dtype=np.float32)
+    out[:, np.arange(n_max), np.arange(n_max)] = 0.0
+    for i, b in enumerate(blocks):
+        out[i, :b.shape[0], :b.shape[0]] = b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device compute (jit, one call per batch)
+# ---------------------------------------------------------------------------
+
+def _batched_minplus(a: jnp.ndarray, b: jnp.ndarray,
+                     use_kernel: bool) -> jnp.ndarray:
+    """One batched min-plus squaring step, via the kernels.minplus entry
+    point — compiled Pallas grid-over-batch on TPU, vmapped jnp oracle on
+    CPU — so the default TPU path actually runs the kernel.  ``use_kernel``
+    forces the Pallas body (interpret mode off-TPU) for cross-validation."""
+    from repro.kernels.minplus import ops as minplus_ops
+
+    return minplus_ops.minplus_batched(a, b, force_kernel=use_kernel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "method", "symmetric"))
+def batched_apsp(adjs: jnp.ndarray, *, use_kernel: bool = False,
+                 method: str | None = None,
+                 symmetric: bool = True) -> jnp.ndarray:
+    """All-pairs shortest paths for a (B, N, N) stack of adjacencies.
+
+    Two interchangeable algorithms (cross-validated in tests):
+
+    * ``"squaring"`` — batched min-plus matrix squaring, O(N^3 log N) but
+      built from large tiled products; this is the TPU path (the batched
+      Pallas kernel runs one (N, N) min-plus tile per grid step) and is
+      forced whenever ``use_kernel`` is set.
+    * ``"fw"`` — batched vectorized Floyd-Warshall, O(N^3) with only a
+      (B, N, N) temporary per step (unrolled x8 to amortize loop dispatch);
+      the CPU default — its rank-1 broadcast-min step is memory-light,
+      which on CPU beats squaring's (B, N, N, N) broadcast temporaries by
+      an order of magnitude.
+
+    ``symmetric`` (default) lets FW read only the contiguous row slice
+    ``d[:, k, :]`` — valid for the undirected overlays every builder in
+    this module produces (both edge directions are scattered).  Pass
+    ``symmetric=False`` for directed inputs.
+    """
+    method = _resolve_method(use_kernel, method)
+    n = adjs.shape[-1]
+    if method == "fw":
+        def fw_body(k, d):
+            if symmetric:
+                col = row = d[:, k, :]
+            else:
+                col, row = d[:, :, k], d[:, k, :]
+            return jnp.minimum(d, col[:, :, None] + row[:, None, :])
+
+        return jax.lax.fori_loop(0, n, fw_body, adjs, unroll=8)
+
+    assert method == "squaring", method
+    n_iters = max(1, int(np.ceil(np.log2(max(n - 1, 2)))))
+
+    def body(_, d):
+        return _batched_minplus(d, d, use_kernel)
+
+    return jax.lax.fori_loop(0, n_iters, body, adjs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "method", "symmetric"))
+def batched_diameter(adjs: jnp.ndarray, *, use_kernel: bool = False,
+                     method: str | None = None,
+                     symmetric: bool = True) -> jnp.ndarray:
+    """(B, N, N) adjacencies -> (B,) largest-CC diameters, one device call."""
+    d = batched_apsp(adjs, use_kernel=use_kernel, method=method,
+                     symmetric=symmetric)
+    return jax.vmap(largest_cc_diameter)(d)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "method", "symmetric"))
+def _batched_diameter_chunked(stack: jnp.ndarray, *, use_kernel: bool = False,
+                              method: str | None = None,
+                              symmetric: bool = True) -> jnp.ndarray:
+    """(C, chunk, N, N) -> (C, chunk): sequential map over fixed-size chunks
+    inside one jit, bounding peak memory at the per-chunk temporaries."""
+    return jax.lax.map(
+        lambda a: batched_diameter(a, use_kernel=use_kernel, method=method,
+                                   symmetric=symmetric),
+        stack)
+
+
+# ---------------------------------------------------------------------------
+# host facade
+# ---------------------------------------------------------------------------
+
+def _resolve_method(use_kernel: bool, method: str | None) -> str:
+    if method is not None:
+        return method
+    return "squaring" if use_kernel or jax.default_backend() == "tpu" else "fw"
+
+
+def default_chunk(n: int, method: str = "fw",
+                  budget_bytes: int = 1 << 28) -> int:
+    """Largest batch chunk whose per-step fp32 temporaries stay under
+    ``budget_bytes`` (~256 MiB).
+
+    Only the CPU jnp-oracle squaring materializes a (chunk, N, N, N)
+    broadcast; the TPU Pallas kernel is tiled (a few VMEM blocks per step)
+    and Floyd-Warshall touches a few (chunk, N, N) slabs, so those paths
+    size by N^2 and keep big batches in one grid launch."""
+    dense_squaring = method == "squaring" and jax.default_backend() != "tpu"
+    per_item = 4 * n ** 3 if dense_squaring else 4 * n * n * 8
+    return max(1, budget_bytes // max(1, per_item))
+
+
+def diameters(adjs: np.ndarray, *, use_kernel: bool = False,
+              method: str | None = None, symmetric: bool = True,
+              chunk: int | None = None) -> np.ndarray:
+    """Diameters for a (B, N, N) adjacency stack, as a host (B,) array.
+
+    Issues exactly ONE device call: small batches go straight through
+    ``batched_diameter``; larger ones are padded to a multiple of ``chunk``
+    and folded through a ``lax.map`` so memory stays bounded.
+    """
+    adjs = np.asarray(adjs, dtype=np.float32)
+    assert adjs.ndim == 3 and adjs.shape[1] == adjs.shape[2], adjs.shape
+    b, n = adjs.shape[0], adjs.shape[-1]
+    if b == 0:
+        return np.zeros((0,), np.float32)
+    chunk = chunk or default_chunk(n, _resolve_method(use_kernel, method))
+    if b <= chunk:
+        out = batched_diameter(jnp.asarray(adjs), use_kernel=use_kernel,
+                               method=method, symmetric=symmetric)
+        return np.asarray(out)
+    pad = (-b) % chunk
+    if pad:
+        adjs = np.concatenate([adjs, np.repeat(adjs[:1], pad, axis=0)], axis=0)
+    stack = adjs.reshape(-1, chunk, n, n)
+    out = _batched_diameter_chunked(jnp.asarray(stack), use_kernel=use_kernel,
+                                    method=method, symmetric=symmetric)
+    return np.asarray(out).reshape(-1)[:b]
+
+
+def diameters_of_rings(w: np.ndarray, genomes, *, use_kernel: bool = False,
+                       method: str | None = None,
+                       chunk: int | None = None) -> np.ndarray:
+    """Score B K-ring genomes by overlay diameter in one batched call."""
+    return diameters(adjacency_batch_from_rings(w, genomes),
+                     use_kernel=use_kernel, method=method, chunk=chunk)

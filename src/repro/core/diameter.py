@@ -32,6 +32,7 @@ __all__ = [
     "adjacency_from_rings",
     "minplus",
     "apsp",
+    "largest_cc_diameter",
     "diameter",
     "diameter_of_rings",
     "diameter_scipy",
@@ -49,13 +50,20 @@ def ring_edges(perm: np.ndarray) -> np.ndarray:
 
 
 def adjacency_from_edges(w: np.ndarray, edges: Iterable[Sequence[int]]) -> np.ndarray:
-    """Weighted adjacency with INF on non-edges, 0 diagonal (undirected)."""
+    """Weighted adjacency with INF on non-edges, 0 diagonal (undirected).
+
+    Vectorized scatter: ``np.minimum.at`` handles duplicate edges exactly like
+    the per-edge ``min`` loop it replaced (parallel-edge weight = min).
+    """
     n = w.shape[0]
     d = np.full((n, n), float(INF), dtype=np.float32)
     np.fill_diagonal(d, 0.0)
-    for u, v in edges:
-        d[u, v] = min(d[u, v], w[u, v])
-        d[v, u] = min(d[v, u], w[v, u])
+    e = np.asarray(edges if isinstance(edges, np.ndarray) else list(edges),
+                   dtype=np.intp).reshape(-1, 2)
+    if e.size:
+        u, v = e[:, 0], e[:, 1]
+        np.minimum.at(d, (u, v), w[u, v].astype(np.float32))
+        np.minimum.at(d, (v, u), w[v, u].astype(np.float32))
     return d
 
 
@@ -99,16 +107,21 @@ def apsp(adj: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
     return jax.lax.fori_loop(0, n_iters, body, adj)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def diameter(adj: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
-    """Weighted diameter of the largest connected component (paper §IV-C)."""
-    d = apsp(adj, use_kernel=use_kernel)
+def largest_cc_diameter(d: jnp.ndarray) -> jnp.ndarray:
+    """Diameter of the largest connected component given APSP distances
+    (paper §IV-C).  Shared by the unbatched path and ``core.batcheval``."""
     finite = d < INF / 2
     sizes = jnp.sum(finite, axis=1)
     anchor = jnp.argmax(sizes)          # a node in the largest component
     mask = finite[anchor]
     pair = mask[:, None] & mask[None, :]
     return jnp.max(jnp.where(pair, d, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def diameter(adj: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
+    """Weighted diameter of the largest connected component (paper §IV-C)."""
+    return largest_cc_diameter(apsp(adj, use_kernel=use_kernel))
 
 
 def diameter_of_rings(w: np.ndarray, perms: Sequence[np.ndarray]) -> float:

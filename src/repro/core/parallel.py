@@ -23,11 +23,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
+from . import batcheval
 from .construction import nearest_ring, nearest_ring_jax
+from .diameter import adjacency_from_rings
 
-__all__ = ["partition_nodes", "parallel_ring", "parallel_ring_shmap"]
+__all__ = ["partition_nodes", "parallel_ring", "parallel_ring_scored",
+           "score_partition_blocks", "parallel_ring_shmap"]
 
 
 def partition_nodes(n: int, m: int, rng: np.random.Generator) -> List[np.ndarray]:
@@ -39,6 +42,35 @@ def partition_nodes(n: int, m: int, rng: np.random.Generator) -> List[np.ndarray
 def parallel_ring(w: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
     """Algorithm 4 on the host: per-partition nearest-neighbour order, then
     stitch segments end-to-end.  Returns the merged ring permutation."""
+    return parallel_ring_scored(w, m, seed=seed)[0]
+
+
+def score_partition_blocks(w: np.ndarray,
+                           segments: List[np.ndarray]) -> np.ndarray:
+    """Per-partition ring diameters, all M blocks in ONE padded device batch.
+
+    Each segment's local ring adjacency (over its own latency block) is
+    padded to the largest partition size and stacked; padded nodes are
+    isolated singletons that the largest-CC rule ignores, so the scores
+    equal each block's own ring diameter.
+    """
+    blocks = []
+    for seg in segments:
+        sub_w = w[np.ix_(seg, seg)]
+        blocks.append(adjacency_from_rings(sub_w, [np.arange(len(seg))]))
+    return batcheval.diameters(batcheval.pad_adjacency_blocks(blocks))
+
+
+def parallel_ring_scored(
+        w: np.ndarray, m: int, seed: int = 0,
+        score_blocks: bool = False) -> Tuple[np.ndarray, np.ndarray | None]:
+    """Algorithm 4 + optional per-partition quality signal.
+
+    Returns (merged ring permutation, per-block ring diameters or None).
+    The block scores — used by the construction monitor and the fig14
+    benchmark — come from one padded batched diameter call rather than M
+    host Dijkstras.
+    """
     rng = np.random.default_rng(seed)
     n = w.shape[0]
     parts = partition_nodes(n, m, rng)
@@ -50,7 +82,8 @@ def parallel_ring(w: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
         start = int(rng.integers(len(nodes)))          # consistent-hash start
         local = nearest_ring(sub_w, start=start)
         segments.append(nodes[local])
-    return np.concatenate(segments)
+    scores = score_partition_blocks(w, segments) if score_blocks else None
+    return np.concatenate(segments), scores
 
 
 def parallel_ring_shmap(w: np.ndarray, mesh: Mesh, axis: str = "partitions",

@@ -18,15 +18,16 @@ ring.)
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Literal, Tuple
+from typing import Literal, Sequence, Tuple
 
 import numpy as np
 
+from . import batcheval
 from .construction import nearest_ring, random_ring
 from .diameter import INF
 
 __all__ = ["LatencyStats", "measure_latency_stats", "clustering_ratio",
-           "select_ring_kind", "adapt_overlay"]
+           "select_ring_kind", "score_candidate_rings", "adapt_overlay"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,28 +109,41 @@ def select_ring_kind(rho: float, eps: float = 0.3) -> RingKind:
     return "keep"
 
 
+def score_candidate_rings(w: np.ndarray, adj: np.ndarray,
+                          rings: Sequence[np.ndarray]) -> np.ndarray:
+    """Diameters of ``adj`` augmented with each candidate ring, scored as one
+    batched device call (``repro.core.batcheval``).  Returns (B,) floats."""
+    overlays = batcheval.overlay_with_rings(adj, w, np.stack(rings)[:, None, :])
+    return batcheval.diameters(overlays)
+
+
 def adapt_overlay(
     w: np.ndarray,
     adj: np.ndarray,
     eps: float = 0.3,
     seed: int = 0,
+    n_candidates: int = 4,
 ) -> Tuple[np.ndarray, RingKind, float]:
     """One DGRO adaptation step: measure -> classify -> add the chosen ring.
 
-    Returns (new adjacency, ring kind added, rho).
+    ``n_candidates`` rings of the selected kind (random permutations, or
+    nearest rings from distinct start nodes) are generated and ALL their
+    augmented overlays are scored in one batched diameter call; the best
+    candidate wins.  Returns (new adjacency, ring kind added, rho).
     """
-    from .diameter import ring_edges
-
+    n = w.shape[0]
     stats = measure_latency_stats(w, adj, seed=seed)
     rho = clustering_ratio(stats)
     kind = select_ring_kind(rho, eps)
     if kind == "keep":
         return adj, kind, rho
     rng = np.random.default_rng(seed)
-    ring = (random_ring(rng, w.shape[0]) if kind == "random"
-            else nearest_ring(w, start=int(rng.integers(w.shape[0]))))
-    new = np.array(adj, copy=True)
-    for u, v in ring_edges(ring):
-        new[u, v] = min(new[u, v], w[u, v])
-        new[v, u] = min(new[v, u], w[v, u])
-    return new, kind, rho
+    if kind == "random":
+        rings = [random_ring(rng, n) for _ in range(n_candidates)]
+    else:
+        starts = rng.choice(n, size=min(n_candidates, n), replace=False)
+        rings = [nearest_ring(w, start=int(s)) for s in starts]
+    scores = score_candidate_rings(w, adj, rings)
+    best = np.stack(rings)[int(np.argmin(scores))]
+    overlay = batcheval.overlay_with_rings(adj, w, best[None, None, :])[0]
+    return overlay, kind, rho

@@ -11,17 +11,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import INF, minplus_pallas
-from .ref import minplus_ref
+from .kernel import INF, minplus_pallas, minplus_pallas_batched
+from .ref import minplus_batched_ref, minplus_ref
 
 
 def _pad_to(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
-    m, n = x.shape
+    *lead, m, n = x.shape
     pm = (-m) % mult
     pn = (-n) % mult
     if pm == 0 and pn == 0:
         return x
-    return jnp.pad(x, ((0, pm), (0, pn)), constant_values=fill)
+    pad = [(0, 0)] * len(lead) + [(0, pm), (0, pn)]
+    return jnp.pad(x, pad, constant_values=fill)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -42,4 +43,25 @@ def minplus(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
     return out[:m, :n]
 
 
-__all__ = ["minplus", "minplus_ref"]
+@functools.partial(jax.jit, static_argnames=("block", "force_kernel"))
+def minplus_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
+                    force_kernel: bool = False) -> jnp.ndarray:
+    """Batched min-plus product ``(B, M, K) x (B, K, N) -> (B, M, N)``.
+
+    Backend dispatch: on TPU the Pallas kernel runs compiled with the batch
+    as the outermost grid axis; everywhere else the vmapped jnp oracle is
+    used (the interpret-mode kernel is far too slow for bulk evaluation —
+    ``force_kernel`` exists so tests can still exercise the kernel path).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_kernel):
+        return minplus_batched_ref(a, b)
+    m, n = a.shape[1], b.shape[2]
+    a32 = _pad_to(a.astype(jnp.float32), block, INF)
+    b32 = _pad_to(b.astype(jnp.float32), block, INF)
+    out = minplus_pallas_batched(a32, b32, bm=block, bn=block, bk=block,
+                                 interpret=not on_tpu)
+    return out[:, :m, :n]
+
+
+__all__ = ["minplus", "minplus_batched", "minplus_ref", "minplus_batched_ref"]

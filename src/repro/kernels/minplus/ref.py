@@ -1,9 +1,15 @@
-"""Pure-jnp oracle for the min-plus kernel."""
+"""Pure-jnp oracles for the min-plus kernel (unbatched and batched)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
 def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """C[i, j] = min_k A[i, k] + B[k, j] (dense broadcast)."""
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def minplus_batched_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[b, i, j] = min_k A[b, i, k] + B[b, k, j] (vmapped dense broadcast)."""
+    return jax.vmap(minplus_ref)(a, b)

@@ -23,8 +23,8 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 import jax
-from jax.sharding import Mesh
 
+from repro.compat import make_mesh, mesh_from_devices
 from repro.core.construction import nearest_ring, random_ring
 from repro.core.diameter import adjacency_from_rings, diameter_scipy
 from repro.core.selection import (clustering_ratio, measure_latency_stats,
@@ -85,9 +85,7 @@ def make_production_mesh(*, multi_pod: bool = False, dgro_order: bool = False,
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     if not dgro_order:
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        return make_mesh(shape, axes)
 
     devices = np.asarray(jax.devices())
     n = int(np.prod(shape))
@@ -104,7 +102,6 @@ def make_production_mesh(*, multi_pod: bool = False, dgro_order: bool = False,
     grid = devices.reshape(n_dcn, n_model)
     grid = grid[order]                         # DGRO permutation of DCN axis
     dev = grid.reshape(shape)
-    mesh = Mesh(dev, axes,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = mesh_from_devices(dev, axes)
     mesh.dgro_report = report                  # type: ignore[attr-defined]
     return mesh

@@ -71,6 +71,25 @@ class Instr:
     line: str
 
 
+def _split_args(s: str) -> List[str]:
+    """Split an operand list on top-level commas only (shape dims and layout
+    braces contain commas too: ``f32[64,64]{1,0} %x, f32[64]{0} %y``)."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def parse_module(hlo: str) -> Tuple[Dict[str, List[Instr]], Dict[str, str], str]:
     """Returns (computations, name->type map, entry computation name)."""
     comps: Dict[str, List[Instr]] = {}
@@ -98,8 +117,21 @@ def parse_module(hlo: str) -> Tuple[Dict[str, List[Instr]], Dict[str, str], str]
         m = _INSTR.match(line)
         if not m:
             continue
-        args = [a.strip().lstrip("%") for a in m.group("args").split(",")
-                if a.strip()]
+        # older XLA text prints operand types inline ("f32[64,64]{1,0} %x");
+        # newer prints bare names ("%x").  Take the last token as the name
+        # and harvest any inline type into the name->type map.
+        args = []
+        for a in _split_args(m.group("args")):
+            a = a.strip()
+            if not a:
+                continue
+            toks = a.split()
+            name = toks[-1].lstrip("%")
+            args.append(name)
+            if len(toks) > 1:
+                inline_type = " ".join(toks[:-1])
+                if _SHAPE.search(inline_type):
+                    types.setdefault(name, inline_type)
         ins = Instr(name=m.group("name"), type_str=m.group("type"),
                     op=m.group("op"), args=args, attrs=m.group("attrs"),
                     line=line)

@@ -4,3 +4,80 @@ import sys
 # tests must see exactly ONE device (the dry-run sets its own 512-device env
 # in a separate process); make the src/ tree importable regardless of cwd.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def subproc_env(**extra):
+    """Minimal env for re-exec'd jax subprocesses, forwarding the parent's
+    platform pins (JAX_PLATFORMS=cpu etc.) so jax does not probe for
+    accelerator hardware and hang in CI containers."""
+    keep = {k: v for k, v in os.environ.items()
+            if k.startswith(("JAX_", "XLA_"))}
+    return {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", **keep, **extra}
+
+
+def _install_hypothesis_fallback() -> None:
+    """Minimal stand-in for ``hypothesis`` so the suite runs without it.
+
+    Only what this suite uses is implemented: ``@settings(max_examples=...,
+    deadline=...)``, ``@given(st.integers(a, b), st.floats(a, b))``.  Each
+    property test is executed for ``max_examples`` deterministic pseudo-random
+    examples (seeded by the test's qualname) plus the strategy endpoints.
+    When the real hypothesis is installed (see requirements.txt / CI) it is
+    used instead and this shim never activates.
+    """
+    import functools
+    import inspect
+    import random
+    import types
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+
+    def integers(min_value, max_value):
+        return (min_value, max_value,
+                lambda rnd: rnd.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return (min_value, max_value,
+                lambda rnd: rnd.uniform(min_value, max_value))
+
+    st_mod.integers = integers
+    st_mod.floats = floats
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", 20)
+                rnd = random.Random(fn.__qualname__)
+                # endpoints first (cheap shrink-less "edge cases"), then draws
+                examples = [tuple(s[0] for s in strategies),
+                            tuple(s[1] for s in strategies)]
+                examples += [tuple(s[2](rnd) for s in strategies)
+                             for _ in range(max(0, n - 2))]
+                for ex in examples[:n]:
+                    fn(*args, *ex, **kwargs)
+            # hide the generated params from pytest's fixture resolution
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.strategies = st_mod
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:  # pragma: no cover - prefer the real library when available
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()

@@ -1,0 +1,216 @@
+"""Batched topology evaluation: (B, N, N) diameters vs the scipy oracle and
+the unbatched JAX path; vectorized adjacency builders; padded batches."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import batcheval, topology
+from repro.core.construction import random_ring
+from repro.core.diameter import (INF, adjacency_from_edges,
+                                 adjacency_from_rings, diameter,
+                                 diameter_scipy, ring_edges)
+
+
+def _genome_batch(rng, b, n, k=2):
+    return np.stack([[rng.permutation(n) for _ in range(k)]
+                     for _ in range(b)])
+
+
+# --- graph assembly ---------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_adjacency_batch_matches_scalar_builder(k):
+    rng = np.random.default_rng(0)
+    w = topology.make_latency("gaussian", 30, seed=1)
+    genomes = _genome_batch(rng, 8, 30, k)
+    batch = batcheval.adjacency_batch_from_rings(w, genomes)
+    for i in range(8):
+        ref = adjacency_from_rings(w, list(genomes[i]))
+        np.testing.assert_array_equal(batch[i], ref)
+
+
+def test_adjacency_from_edges_matches_old_loop():
+    """Regression: the np.minimum.at scatter must reproduce the per-edge
+    Python loop it replaced, bit for bit — including duplicate and
+    self-referential edges resolving to the min weight."""
+    rng = np.random.default_rng(2)
+    n = 25
+    w = topology.make_latency("fabric", n, seed=3)
+    edges = rng.integers(0, n, size=(120, 2)).tolist()
+    edges += edges[:13]                      # duplicates on purpose
+
+    def old_loop(w, edges):
+        d = np.full((n, n), float(INF), dtype=np.float32)
+        np.fill_diagonal(d, 0.0)
+        for u, v in edges:
+            d[u, v] = min(d[u, v], w[u, v])
+            d[v, u] = min(d[v, u], w[v, u])
+        return d
+
+    got = adjacency_from_edges(w, edges)
+    np.testing.assert_array_equal(got, old_loop(w, edges))
+
+
+def test_rings_to_edges_shapes_and_content():
+    perm = np.array([2, 0, 1])
+    edges = batcheval.rings_to_edges(perm[None])
+    assert edges.shape == (1, 3, 2)
+    np.testing.assert_array_equal(edges[0], ring_edges(perm))
+
+
+# --- batched diameters vs oracles ------------------------------------------
+
+@pytest.mark.parametrize("dist", ["uniform", "gaussian", "fabric", "bitnode"])
+def test_batched_matches_scipy_elementwise(dist):
+    rng = np.random.default_rng(4)
+    n, b = 26, 12
+    w = topology.make_latency(dist, n, seed=5)
+    genomes = _genome_batch(rng, b, n)
+    batch = batcheval.adjacency_batch_from_rings(w, genomes)
+    got = batcheval.diameters(batch)
+    for i in range(b):
+        assert got[i] == pytest.approx(diameter_scipy(batch[i]), rel=1e-5)
+
+
+def test_batched_matches_unbatched_jax():
+    rng = np.random.default_rng(6)
+    n, b = 20, 6
+    w = topology.make_latency("uniform", n, seed=7)
+    batch = batcheval.adjacency_batch_from_rings(w, _genome_batch(rng, b, n))
+    got = batcheval.diameters(batch)
+    for i in range(b):
+        assert got[i] == pytest.approx(
+            float(diameter(jnp.asarray(batch[i]))), rel=1e-5)
+
+
+def test_methods_agree():
+    """Floyd-Warshall and min-plus squaring are interchangeable."""
+    rng = np.random.default_rng(8)
+    n = 22
+    w = topology.make_latency("gaussian", n, seed=9)
+    batch = batcheval.adjacency_batch_from_rings(w, _genome_batch(rng, 5, n))
+    d_fw = batcheval.diameters(batch, method="fw")
+    d_sq = batcheval.diameters(batch, method="squaring")
+    d_asym = batcheval.diameters(batch, method="fw", symmetric=False)
+    np.testing.assert_allclose(d_fw, d_sq, rtol=1e-5)
+    np.testing.assert_allclose(d_fw, d_asym, rtol=1e-5)
+
+
+def test_disconnected_uses_largest_component():
+    """§IV-C: disconnected overlays score by the largest component, batched
+    exactly like the scipy oracle."""
+    w = topology.make_latency("uniform", 12, seed=0)
+    # ring over 0..6 + edge 7-8; nodes 9..11 isolated
+    e1 = np.concatenate([ring_edges(np.arange(7)), [[7, 8]]], axis=0)
+    # two components of different sizes: ring over 0..3, ring over 4..11
+    e2 = np.concatenate([ring_edges(np.arange(4)),
+                         ring_edges(np.arange(4, 12))], axis=0)
+    blocks = [adjacency_from_edges(w, e1), adjacency_from_edges(w, e2)]
+    batch = np.stack(blocks)
+    got = batcheval.diameters(batch)
+    for i, adj in enumerate(blocks):
+        want = diameter_scipy(adj)
+        assert want < float(INF) / 2
+        assert got[i] == pytest.approx(want, rel=1e-5), i
+
+
+def test_chunked_path_matches_direct():
+    rng = np.random.default_rng(10)
+    n, b = 18, 23
+    w = topology.make_latency("uniform", n, seed=11)
+    batch = batcheval.adjacency_batch_from_rings(w, _genome_batch(rng, b, n))
+    direct = batcheval.diameters(batch)
+    chunked = batcheval.diameters(batch, chunk=4)   # 23 -> 6 chunks, padded
+    np.testing.assert_allclose(direct, chunked, rtol=1e-6)
+
+
+def test_padded_blocks_score_like_their_own_graphs():
+    rng = np.random.default_rng(12)
+    w = topology.make_latency("gaussian", 40, seed=13)
+    sizes = (5, 11, 24, 40)
+    blocks = [adjacency_from_rings(w[:m, :m], [rng.permutation(m)])
+              for m in sizes]
+    got = batcheval.diameters(batcheval.pad_adjacency_blocks(blocks))
+    for i, blk in enumerate(blocks):
+        assert got[i] == pytest.approx(diameter_scipy(blk), rel=1e-5), sizes[i]
+
+
+def test_overlay_with_rings_only_improves():
+    rng = np.random.default_rng(14)
+    n = 24
+    w = topology.make_latency("fabric", n, seed=15)
+    base = adjacency_from_rings(w, [random_ring(rng, n)])
+    rings = np.stack([random_ring(rng, n) for _ in range(6)])[:, None, :]
+    overlays = batcheval.overlay_with_rings(base, w, rings)
+    d_base = diameter_scipy(base)
+    got = batcheval.diameters(overlays)
+    assert np.all(got <= d_base + 1e-3)
+    for i in range(6):
+        assert np.all(overlays[i] <= base + 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(6, 24), st.integers(0, 10_000))
+def test_batched_diameter_property(n, seed):
+    """Property: for random K-ring batches, the batched engine equals the
+    scipy oracle on every element (spot-checked) and is permutation-stable
+    across the batch axis."""
+    rng = np.random.default_rng(seed)
+    w = topology.make_latency("uniform", n, seed=seed % 97)
+    batch = batcheval.adjacency_batch_from_rings(
+        w, _genome_batch(rng, 5, n, k=1))
+    got = batcheval.diameters(batch)
+    i = seed % 5
+    assert got[i] == pytest.approx(diameter_scipy(batch[i]), rel=1e-4)
+    perm = rng.permutation(5)
+    np.testing.assert_allclose(batcheval.diameters(batch[perm]), got[perm],
+                               rtol=1e-6)
+
+
+# --- consumers --------------------------------------------------------------
+
+def test_evolve_generations_and_history():
+    from repro.core.ga import GAConfig, evolve
+    w = topology.make_latency("uniform", 16, seed=16)
+    cfg = GAConfig(k_rings=2, population=10, budget=50, seed=0)
+    res = evolve(w, cfg)
+    assert res.evaluations == 50
+    assert res.generations == 4          # 10 init + 4 * 10 children
+    assert len(res.history) == 5
+    assert res.history == sorted(res.history, reverse=True)  # monotone best
+    assert res.best_diameter == pytest.approx(res.history[-1])
+    for ring in res.best:
+        assert sorted(ring) == list(range(16))
+
+
+def test_score_candidate_rings_matches_scipy():
+    from repro.core.selection import score_candidate_rings
+    rng = np.random.default_rng(17)
+    n = 20
+    w = topology.make_latency("gaussian", n, seed=18)
+    base = adjacency_from_rings(w, [random_ring(rng, n)])
+    rings = [random_ring(rng, n) for _ in range(4)]
+    got = score_candidate_rings(w, base, rings)
+    for i, ring in enumerate(rings):
+        want = diameter_scipy(np.minimum(
+            base, adjacency_from_rings(w, [ring])))
+        assert got[i] == pytest.approx(want, rel=1e-5), i
+
+
+def test_score_partition_blocks_matches_scipy():
+    from repro.core.parallel import parallel_ring_scored, partition_nodes
+    from repro.core.construction import nearest_ring
+    w = topology.make_latency("gaussian", 48, seed=19)
+    perm, scores = parallel_ring_scored(w, 5, seed=0, score_blocks=True)
+    assert sorted(perm) == list(range(48))
+    assert scores.shape == (5,)
+    rng = np.random.default_rng(0)
+    parts = partition_nodes(48, 5, rng)
+    for i, nodes in enumerate(parts):
+        sub_w = w[np.ix_(nodes, nodes)]
+        start = int(rng.integers(len(nodes)))
+        seg = nodes[nearest_ring(sub_w, start=start)]
+        sw = w[np.ix_(seg, seg)]
+        want = diameter_scipy(adjacency_from_rings(sw, [np.arange(len(seg))]))
+        assert scores[i] == pytest.approx(want, rel=1e-5), i

@@ -2,11 +2,14 @@
 import subprocess
 import sys
 
+from conftest import subproc_env
+
 import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.train.collectives import _quantize
+
 
 
 @settings(max_examples=30, deadline=None)
@@ -26,10 +29,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from repro.train.collectives import ring_allreduce, compressed_grad_allreduce
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 1003)) * 3.0
 fn = shard_map(lambda xl: ring_allreduce(xl[0], "data")[None], mesh=mesh,
                in_specs=P("data", None), out_specs=P("data", None),
@@ -53,7 +56,6 @@ assert np.abs(np.asarray(mean)[0] - true).max() / np.abs(true).max() < 0.05
 print("OK")
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env={"PYTHONPATH": "src",
-                                         "PATH": "/usr/bin:/bin"},
+                         text=True, env=subproc_env(),
                          cwd=".", timeout=300)
     assert "OK" in out.stdout, out.stderr[-2000:]

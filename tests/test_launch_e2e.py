@@ -2,7 +2,9 @@
 import subprocess
 import sys
 
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+from conftest import subproc_env
+
+ENV = subproc_env()
 
 
 def test_train_cli_smoke(tmp_path):
@@ -44,8 +46,8 @@ tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
         "b": jnp.ones((4,), jnp.bfloat16)}
 with tempfile.TemporaryDirectory() as d:
     save(d, 7, tree)
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((4,), ("data",))
     shardings = {"w": NamedSharding(mesh, P("data", None)),
                  "b": NamedSharding(mesh, P())}
     got, step = restore(d, tree, shardings=shardings)

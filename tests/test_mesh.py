@@ -3,10 +3,13 @@ subprocess mesh-construction check."""
 import subprocess
 import sys
 
+from conftest import subproc_env
+
 import numpy as np
 
 from repro.core.diameter import adjacency_from_rings, diameter_scipy
 from repro.launch.mesh import dgro_host_order, model_dcn_latency
+
 
 
 def test_model_dcn_latency_structure():
@@ -48,7 +51,6 @@ assert d_base == d_dgro
 print("OK", m3.dgro_report["selected"], round(m3.dgro_report["diameter"], 1))
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env={"PYTHONPATH": "src",
-                                         "PATH": "/usr/bin:/bin"},
+                         text=True, env=subproc_env(),
                          cwd=".", timeout=300)
     assert "OK" in out.stdout, out.stderr[-2000:]

@@ -2,6 +2,8 @@
 import subprocess
 import sys
 
+from conftest import subproc_env
+
 import numpy as np
 import pytest
 
@@ -10,6 +12,7 @@ from repro.core.diameter import (INF, adjacency_from_rings, diameter_scipy)
 from repro.core.ga import GAConfig, ga_search, random_search
 from repro.core.parallel import parallel_ring, partition_nodes
 from repro.core.topology import make_latency
+
 
 
 def test_partition_nodes_cover_all():
@@ -37,8 +40,8 @@ import numpy as np, jax
 from repro.core.topology import make_latency
 from repro.core.parallel import parallel_ring, parallel_ring_shmap
 w = make_latency("gaussian", 64, seed=3)
-mesh = jax.make_mesh((8,), ("partitions",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("partitions",))
 p_host = parallel_ring(w, 8, seed=0)
 p_shm = parallel_ring_shmap(w, mesh, seed=0)
 assert sorted(p_shm) == list(range(64))
@@ -49,7 +52,7 @@ assert abs(dh - ds) < 1e-6, (dh, ds)
 print("OK")
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                         text=True, env=subproc_env(),
                          cwd=".", timeout=300)
     assert "OK" in out.stdout, out.stderr[-2000:]
 

@@ -3,18 +3,23 @@ multi-device dry-run integration test (subprocess, 8 fake devices)."""
 import subprocess
 import sys
 
+from conftest import subproc_env
+
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.configs import ARCHS, get_arch
 from repro.launch.shardings import (batch_specs, cache_specs, param_specs,
                                     spec_for_param, state_specs, zero_spec)
 from repro.models import model as Mdl
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+
+
+MESH = abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
@@ -81,8 +86,8 @@ from repro.roofline.analysis import parse_collectives, roofline_from
 from repro.train.train_step import TrainConfig, TrainState, train_step
 from repro.train.optimizer import adamw_init
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_arch("moonshot-v1-16b-a3b").smoke()
 tc = TrainConfig(remat=True, microbatches=1)
 rules = default_rules(data_axes=("data",), mesh=mesh)
@@ -109,7 +114,6 @@ assert roof.n_collectives > 0, "SPMD must emit collectives"
 print("OK", int(roof.flops), roof.n_collectives)
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env={"PYTHONPATH": "src",
-                                         "PATH": "/usr/bin:/bin"},
+                         text=True, env=subproc_env(),
                          cwd=".", timeout=600)
     assert "OK" in out.stdout, out.stderr[-3000:]
