@@ -1,0 +1,193 @@
+"""Churn maintenance throughput + dynamic diameter trajectories (fig. 16).
+
+Part A — the gate.  A deterministic stream of churn ops (edge inserts,
+joins, leaves) over an N-node overlay is applied to
+``dynamics.IncrementalDistances`` two ways:
+
+  * ``incremental`` — O(N^2) relaxations, tombstones, threshold rebuilds;
+  * ``full``        — a from-scratch batched APSP (``core.batcheval``)
+                      after every event: exactly what the static stack did.
+
+The acceptance gate is >= 5x churn-events/sec for incremental over full at
+N=128 (enforced by ``benchmarks.run`` via ``passes_gate``).  A third row
+reports the batched-replica path (``relax_edge_stream_batched``: B scenario
+replicas advanced in one device call).
+
+Part B — end-to-end trajectories.  Every scenario in
+``dynamics.scenarios.SCENARIOS`` is replayed against DGRO / Chord / RAPID /
+Perigee policies; we report mean/peak/final overlay diameter and live-node
+counts.  Results are also written to ``BENCH_fig16_churn.json`` so CI can
+archive the perf trajectory across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.diameter import adjacency_from_edges, ring_edges
+from repro.dynamics import POLICIES, SCENARIOS, ChurnEngine, IncrementalDistances
+from repro.dynamics.incremental import relax_edge_stream_batched
+from repro.core.topology import make_latency
+
+
+def _initial_state(w: np.ndarray, n_live: int, seed: int):
+    """Overlay of two random rings over the first ``n_live`` slots."""
+    cap = w.shape[0]
+    rng = np.random.default_rng(seed)
+    alive = np.zeros(cap, bool)
+    alive[:n_live] = True
+    edges = np.concatenate([ring_edges(rng.permutation(n_live))
+                            for _ in range(2)])
+    return adjacency_from_edges(w, edges), alive
+
+
+def _make_ops(n_live: int, capacity: int, n_ops: int, seed: int):
+    """Deterministic churn op stream with its own membership bookkeeping."""
+    rng = np.random.default_rng(seed)
+    live = list(range(n_live))
+    dead = list(range(n_live, capacity))
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.70 or len(live) < 8:
+            u, v = rng.choice(live, size=2, replace=False)
+            ops.append(("add", int(u), int(v)))
+        elif r < 0.85 and dead:
+            u = dead.pop(0)
+            nbrs = [int(x) for x in rng.choice(live, size=3, replace=False)]
+            ops.append(("join", u, tuple(nbrs)))
+            live.append(u)
+        else:
+            u = live.pop(int(rng.integers(len(live))))
+            dead.append(u)
+            ops.append(("leave", u, ()))
+    return ops
+
+
+def _apply_ops(inc: IncrementalDistances, ops) -> None:
+    for op in ops:
+        if op[0] == "add":
+            inc.add_edge(op[1], op[2])
+        elif op[0] == "join":
+            inc.join(op[1], list(op[2]))
+        else:
+            inc.leave(op[1])
+    np.asarray(inc.distances)      # block until device work is done
+
+
+def _bench_mode(w, adj, alive, ops, mode: str, threshold: int,
+                repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        inc = IncrementalDistances(w, adj, alive, mode=mode,
+                                   rebuild_threshold=threshold)
+        t0 = time.perf_counter()
+        _apply_ops(inc, ops)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_batched_stream(w, adj, alive, b: int, t_steps: int,
+                          seed: int) -> float:
+    """Events/sec of the one-device-call batched insert stream."""
+    rng = np.random.default_rng(seed)
+    live = np.flatnonzero(alive)
+    dist0 = IncrementalDistances(w, adj, alive).distances
+    dists = jnp.asarray(np.repeat(dist0[None], b, axis=0))
+    iu = rng.integers(0, len(live), size=(t_steps, b))
+    off = rng.integers(1, len(live), size=(t_steps, b))
+    us = live[iu]
+    vs = live[(iu + off) % len(live)]        # distinct from us by construction
+    ws = w[us, vs].astype(np.float32)
+    args = (jnp.asarray(us), jnp.asarray(vs), jnp.asarray(ws))
+    relax_edge_stream_batched(dists, *args).block_until_ready()   # warm jit
+    t0 = time.perf_counter()
+    relax_edge_stream_batched(dists, *args).block_until_ready()
+    dt = time.perf_counter() - t0
+    return (t_steps * b) / dt
+
+
+def run(n_gate: int = 128, gate_ops: int = 80, gate_threshold: int = 16,
+        traj_n0: int = 32, seed: int = 0, batch_replicas: int = 16,
+        out_json: str = "BENCH_fig16_churn.json"):
+    t0 = time.time()
+    results = {"gate": {}, "trajectories": []}
+
+    # ---- part A: maintenance throughput gate at N=n_gate -----------------
+    capacity = n_gate + max(8, gate_ops // 5)
+    w = make_latency("bitnode", capacity, seed=seed + 7)
+    adj, alive = _initial_state(w, n_gate, seed)
+    ops = _make_ops(n_gate, capacity, gate_ops, seed + 1)
+    # warm both jit paths (compile outside the timed runs)
+    _bench_mode(w, adj, alive, ops[:4], "incremental", gate_threshold, 1)
+    _bench_mode(w, adj, alive, ops[:2], "full", gate_threshold, 1)
+
+    t_inc = _bench_mode(w, adj, alive, ops, "incremental", gate_threshold)
+    t_full = _bench_mode(w, adj, alive, ops, "full", gate_threshold)
+    ev_batched = _bench_batched_stream(w, adj, alive, batch_replicas,
+                                       max(8, gate_ops // 2), seed + 2)
+    speedup = t_full / t_inc
+    results["gate"] = {
+        "n": n_gate, "ops": gate_ops, "rebuild_threshold": gate_threshold,
+        "events_per_s_incremental": gate_ops / t_inc,
+        "events_per_s_full": gate_ops / t_full,
+        "events_per_s_batched_stream": ev_batched,
+        "batch_replicas": batch_replicas,
+        "speedup": speedup,
+    }
+    print("mode,n,events_per_s")
+    print(f"full-recompute,{n_gate},{gate_ops / t_full:.0f}")
+    print(f"incremental,{n_gate},{gate_ops / t_inc:.0f}")
+    print(f"batched-stream[B={batch_replicas}],{n_gate},{ev_batched:.0f}")
+    print(f"# incremental speedup {speedup:.1f}x (gate >= 5x)")
+
+    # ---- part B: scenario x policy diameter trajectories -----------------
+    print("scenario,policy,events,n_live_end,mean_diam,peak_diam,final_diam,"
+          "rebuilds")
+    for sname, make in SCENARIOS.items():
+        trace = make(n0=traj_n0, seed=seed + 3)
+        for pname, P in POLICIES.items():
+            eng = ChurnEngine(trace, P(), seed=seed + 4,
+                              detect_failures=True)
+            # exact sampling: trajectories compare true diameters across
+            # policies, not the incremental maintenance lower bound
+            res = eng.run(sample_exact=True)
+            row = {
+                "scenario": sname, "policy": pname,
+                "events": len(trace.events),
+                "n_live_end": res.samples[-1].n_live,
+                "mean_diameter": res.mean_diameter,
+                "peak_diameter": res.peak_diameter,
+                "final_diameter": res.final_diameter,
+                "rebuilds": res.stats["rebuilds"],
+            }
+            results["trajectories"].append(row)
+            print(f"{sname},{pname},{row['events']},{row['n_live_end']},"
+                  f"{row['mean_diameter']:.1f},{row['peak_diameter']:.1f},"
+                  f"{row['final_diameter']:.1f},{row['rebuilds']}")
+
+    wall = time.time() - t0
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    n_rows = 3 + len(results["trajectories"])
+    return {"name": "fig16_churn",
+            "us_per_call": wall * 1e6 / n_rows,
+            "derived": f"incremental {speedup:.1f}x vs full recompute "
+                       f"at N={n_gate}",
+            "passes_gate": speedup >= 5.0}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-gate", type=int, default=128)
+    ap.add_argument("--gate-ops", type=int, default=80)
+    ap.add_argument("--traj-n0", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(run(n_gate=args.n_gate, gate_ops=args.gate_ops,
+              traj_n0=args.traj_n0, seed=args.seed))

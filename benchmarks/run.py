@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks import (fig09_training_curve, fig10_dgro_vs_ga,
                             fig11_ring_selection, fig12_ring_ablation,
                             fig13_kring_compare, fig14_parallel,
-                            fig15_batcheval, roofline_table)
+                            fig15_batcheval, fig16_churn, roofline_table)
 
     fast = args.fast
     jobs = [
@@ -58,6 +58,11 @@ def main() -> None:
             scipy_cap=16 if fast else 64)),
         ("fig18-bitnode", lambda: fig14_parallel.run(
             "bitnode", 64 if fast else 256)),
+        # the >=5x incremental-vs-full gate always runs at N=128; --fast
+        # only shrinks the op stream and the trajectory fleets
+        ("fig16-churn", lambda: fig16_churn.run(
+            gate_ops=40 if fast else 80,
+            traj_n0=24 if fast else 48)),
         ("roofline", roofline_table.run),
     ]
 
@@ -71,8 +76,8 @@ def main() -> None:
             else:
                 with contextlib.redirect_stdout(buf):
                     res = fn()
-            # hard gates opt in via 'passes_gate' (fig15's >=5x throughput
-            # claim); soft 'holds'/'improves' flags stay informational
+            # hard gates opt in via 'passes_gate' (fig15's and fig16's >=5x
+            # throughput claims); soft 'holds'/'improves' stay informational
             if res.get("passes_gate", True):
                 print(f"{res['name']},{res['us_per_call']:.1f},{res['derived']}")
             else:

@@ -1,0 +1,43 @@
+"""DGRO self-repair under a correlated regional failure.
+
+A FABRIC fleet loses an entire site at t=5s; SWIM detection confirms the
+crashes, the churn engine tombstones the victims, ring repairs stitch the
+survivors, and DGRO's ring-selection repair (Algorithm 3 over the live
+fleet) restores a low-diameter overlay — all on incrementally-maintained
+distances.  Chord replays the same trace for contrast.
+
+    PYTHONPATH=src python examples/churn_sim.py
+"""
+import numpy as np
+
+from repro.dynamics import ChordPolicy, ChurnEngine, DGROPolicy
+from repro.dynamics.scenarios import regional_failure
+
+
+def main():
+    trace = regional_failure(n0=51, site=0, t_fail=5_000.0, seed=1)
+    victims = sorted({e.node for e in trace.events})
+    print(f"== regional failure: site 0 of a {trace.n0}-host FABRIC fleet ==")
+    print(f"victims (slots at site 0): {victims}")
+    print(f"trace is replayable JSON ({len(trace.to_json())} bytes)\n")
+
+    for policy in (DGROPolicy(adapt_every=2), ChordPolicy()):
+        eng = ChurnEngine(trace, policy, seed=0, detect_failures=True)
+        res = eng.run(sample_exact=True)
+        print(f"-- {policy.name} --")
+        print("   t(ms)  event      live  diameter(ms)")
+        for s in res.samples:
+            print(f"{s.time:8.0f}  {s.event:<9s}  {s.n_live:4d}  "
+                  f"{s.diameter:8.1f}")
+        st = res.stats
+        print(f"final (exact) diameter: {res.final_diameter:.1f}ms | "
+              f"relaxations={st['relaxations']} rebuilds={st['rebuilds']}"
+              + (f" ring-adaptations={st['adaptations']}"
+                 if "adaptations" in st else ""))
+        assert eng.inc.n_live == trace.n0 - len(victims)
+        assert np.isfinite(res.final_diameter)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,7 @@
 """Membership-plane simulation: DGRO ring vs random ring for failure
-detection and dissemination, plus straggler demotion and elastic rescale.
+detection and dissemination, plus engine-driven elastic rescale — a crash
+and a straggler flow through the churn engine (SWIM confirmation, overlay
+repair, straggler demotion) and the surviving fleet feeds the rescale plan.
 
     PYTHONPATH=src python examples/membership_sim.py
 """
@@ -8,7 +10,8 @@ import numpy as np
 from repro.core.construction import nearest_ring, random_ring
 from repro.core.diameter import adjacency_from_rings, diameter_scipy
 from repro.core.topology import make_latency
-from repro.membership.elastic import HostState, plan_rescale, update_ewma
+from repro.dynamics import ChurnEngine, DGROPolicy, Event, Trace
+from repro.membership.elastic import plan_rescale_from_engine
 from repro.membership.gossip import disseminate, simulate_failure_detection
 
 
@@ -32,17 +35,24 @@ def main():
               f"failure: suspect@{det.t_first_suspect:.0f}ms "
               f"everyone-knows@{det.t_all_know:.0f}ms")
 
-    # --- straggler + elastic rescale ---
-    print("\n== elastic rescale after failure + straggler demotion ==")
-    hosts = [HostState(i) for i in range(32)]
-    hosts[5].alive = False                       # crashed
-    for _ in range(20):
-        update_ewma(hosts[11], 250.0)            # persistent straggler
-        for h in hosts:
-            if h.host_id != 11 and h.alive:
-                update_ewma(h, np.random.default_rng(h.host_id).normal(10, 1))
-    plan = plan_rescale(make_latency("fabric", 32, seed=3), hosts,
-                        model_hosts=4, old_world=32)
+    # --- churn engine: crash + straggler -> demotion -> elastic rescale ---
+    print("\n== engine-driven rescale after failure + straggler demotion ==")
+    events = [
+        Event(time=1_000.0, kind="fail", node=5),                 # crash
+        Event(time=3_000.0, kind="straggler", node=11, factor=25.0),
+    ]
+    trace = Trace(n0=32, capacity=32, dist="fabric", seed=3,
+                  events=events, name="rescale_demo")
+    engine = ChurnEngine(trace, DGROPolicy(), seed=0, detect_failures=True)
+    res = engine.run(sample_exact=True)
+    for s in res.samples:
+        print(f"t={s.time:7.0f}ms  {s.event:<9s} live={s.n_live:2d}  "
+              f"diameter={s.diameter:7.1f}ms")
+    print(f"overlay after churn: exact diameter {res.final_diameter:.1f}ms "
+          f"({res.stats['relaxations']} relaxations, "
+          f"{res.stats['rebuilds']} rebuilds)")
+
+    plan = plan_rescale_from_engine(engine, model_hosts=4, old_world=32)
     print(f"survivors={len(plan.hosts)} mesh(pods,data,model)={plan.mesh_shape} "
           f"ring={plan.ring_kind} rho={plan.rho:.2f}")
     print(f"step-time factor ~{plan.expected_step_time_factor:.2f}x; "

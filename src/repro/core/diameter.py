@@ -27,6 +27,8 @@ INF = jnp.float32(1e9)  # finite "infinity": avoids inf-inf NaN in min-plus
 
 __all__ = [
     "INF",
+    "is_edge",
+    "neighbour_lists",
     "adjacency_from_edges",
     "ring_edges",
     "adjacency_from_rings",
@@ -42,6 +44,25 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # graph assembly
 # ---------------------------------------------------------------------------
+
+def is_edge(adj):
+    """Boolean mask of actual edges in a weighted adjacency matrix.
+
+    An entry is an edge iff it is strictly positive (excludes the 0 diagonal)
+    and below the INF sentinel.  The ``INF / 2`` guard absorbs sentinel
+    round-off from device round-trips; works on numpy and jax arrays alike.
+    """
+    return (adj > 0) & (adj < float(INF) / 2)
+
+
+def neighbour_lists(adj: np.ndarray) -> list:
+    """Per-node neighbour index lists, from one vectorized ``is_edge`` pass.
+
+    Event loops that look up neighbours per event should call this once per
+    overlay instead of re-scanning adjacency rows."""
+    mask = np.asarray(is_edge(adj))
+    return [np.flatnonzero(mask[u]) for u in range(mask.shape[0])]
+
 
 def ring_edges(perm: np.ndarray) -> np.ndarray:
     """Edges of the ring perm[0] -> perm[1] -> ... -> perm[-1] -> perm[0]."""
@@ -61,6 +82,10 @@ def adjacency_from_edges(w: np.ndarray, edges: Iterable[Sequence[int]]) -> np.nd
     e = np.asarray(edges if isinstance(edges, np.ndarray) else list(edges),
                    dtype=np.intp).reshape(-1, 2)
     if e.size:
+        if e.min() < 0 or e.max() >= n:
+            raise ValueError(
+                f"edge endpoints must lie in [0, {n}); got range "
+                f"[{e.min()}, {e.max()}]")
         u, v = e[:, 0], e[:, 1]
         np.minimum.at(d, (u, v), w[u, v].astype(np.float32))
         np.minimum.at(d, (v, u), w[v, u].astype(np.float32))
@@ -68,7 +93,19 @@ def adjacency_from_edges(w: np.ndarray, edges: Iterable[Sequence[int]]) -> np.nd
 
 
 def adjacency_from_rings(w: np.ndarray, perms: Sequence[np.ndarray]) -> np.ndarray:
-    """Union of K rings as a weighted adjacency matrix."""
+    """Union of K rings as a weighted adjacency matrix.
+
+    Every ring must be a permutation of ``range(n)`` — a shorter / repeated
+    ring would silently produce an overlay over the wrong node set.
+    """
+    n = w.shape[0]
+    ident = np.arange(n)
+    for i, p in enumerate(perms):
+        p = np.asarray(p)
+        if p.shape != (n,) or not np.array_equal(np.sort(p), ident):
+            raise ValueError(
+                f"ring {i} is not a permutation of range({n}): "
+                f"shape {p.shape}, unique {np.unique(p).size}")
     edges = np.concatenate([ring_edges(p) for p in perms], axis=0)
     return adjacency_from_edges(w, edges)
 
@@ -139,8 +176,7 @@ def diameter_scipy(adj: np.ndarray) -> float:
     from scipy.sparse.csgraph import connected_components, dijkstra
 
     adj = np.asarray(adj, dtype=np.float64)
-    finite = (adj < float(INF) / 2) & (adj > 0)
-    sp = csr_matrix(np.where(finite, adj, 0.0))
+    sp = csr_matrix(np.where(is_edge(adj), adj, 0.0))
     ncomp, labels = connected_components(sp, directed=False)
     if ncomp > 1:
         largest = np.bincount(labels).argmax()

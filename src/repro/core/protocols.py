@@ -19,9 +19,10 @@ from typing import List, Tuple
 import numpy as np
 
 from .construction import default_num_rings, nearest_ring, random_ring
-from .diameter import adjacency_from_edges, adjacency_from_rings, ring_edges
+from .diameter import (adjacency_from_edges, adjacency_from_rings, is_edge,
+                       ring_edges)
 
-__all__ = ["chord", "rapid", "perigee", "with_replaced_rings"]
+__all__ = ["chord", "rapid", "perigee", "node_degrees", "with_replaced_rings"]
 
 Overlay = Tuple[np.ndarray, List[np.ndarray]]
 
@@ -77,6 +78,11 @@ def perigee(
     return adjacency_from_edges(w, edges), [ring]
 
 
+def node_degrees(adj: np.ndarray) -> np.ndarray:
+    """Per-node overlay degree (number of actual edges per row)."""
+    return is_edge(adj).sum(axis=1)
+
+
 def with_replaced_rings(
     w: np.ndarray,
     base_edges_adj: np.ndarray,
@@ -88,8 +94,6 @@ def with_replaced_rings(
     ``base_edges_adj`` must be the overlay *without* the old rings; callers
     that only have the full overlay should rebuild from scratch instead.
     """
-    from .diameter import INF
-
     d = np.array(base_edges_adj, copy=True)
     for ring in new_rings:
         for u, v in ring_edges(ring):

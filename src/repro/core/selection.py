@@ -24,7 +24,7 @@ import numpy as np
 
 from . import batcheval
 from .construction import nearest_ring, random_ring
-from .diameter import INF
+from .diameter import neighbour_lists
 
 __all__ = ["LatencyStats", "measure_latency_stats", "clustering_ratio",
            "select_ring_kind", "score_candidate_rings", "adapt_overlay"]
@@ -47,8 +47,7 @@ def _gossip_average(values: np.ndarray, adj: np.ndarray,
     """
     n = values.shape[0]
     est = np.concatenate([values, np.ones((n, 1))], axis=1)  # push-sum weight
-    neigh = [np.flatnonzero((adj[u] > 0) & (adj[u] < float(INF) / 2))
-             for u in range(n)]
+    neigh = neighbour_lists(adj)
     for _ in range(rounds):
         out = est * 0.5                      # keep half, send half
         incoming = np.zeros_like(est)
@@ -74,8 +73,9 @@ def measure_latency_stats(
     n = w.shape[0]
     k = k_samples or max(2, int(np.ceil(np.log2(n))))
     per_node = np.zeros((n, 3), np.float64)
+    neigh_lists = neighbour_lists(adj)
     for u in range(n):
-        neigh = np.flatnonzero((adj[u] > 0) & (adj[u] < float(INF) / 2))
+        neigh = neigh_lists[u]
         if len(neigh) == 0:
             neigh = np.array([(u + 1) % n])
         r = rng.choice(neigh, size=min(k, len(neigh)), replace=False)

@@ -21,6 +21,7 @@ __all__ = [
     "bitnode_latency",
     "make_latency",
     "DISTRIBUTIONS",
+    "N_FABRIC_SITES",
 ]
 
 
@@ -68,6 +69,10 @@ _FABRIC_SITES = np.array([
     (-0.13, 51.51),     # London
     (8.68, 50.11),      # Frankfurt
 ], dtype=np.float64)
+
+# node i is assigned to site i % N_FABRIC_SITES (see fabric_latency);
+# regional churn scenarios rely on the same assignment
+N_FABRIC_SITES = len(_FABRIC_SITES)
 
 
 def _greatcircle_ms(coords: np.ndarray) -> np.ndarray:

@@ -1,0 +1,18 @@
+"""repro.dynamics — churn-driven dynamic overlay engine.
+
+Submodules:
+  incremental — exact O(N^2) APSP repair under edge inserts / node joins,
+                tombstone + threshold-rebuild under deletions, batched
+                replica variants (one device call for B scenarios)
+  scenarios   — replayable churn traces (JSON) + the scenario library
+                (poisson churn, flash crowd, regional failure, diurnal
+                drift, straggler storm)
+  engine      — discrete-event replay of a trace against an overlay policy
+                (DGRO / Chord / RAPID / Perigee) with SWIM failure
+                confirmation and DGRO ring-selection self-repair
+"""
+from . import engine, incremental, scenarios  # noqa: F401
+from .engine import (ChordPolicy, ChurnEngine, DGROPolicy, PerigeePolicy,  # noqa: F401
+                     POLICIES, RapidPolicy, RunResult)
+from .incremental import IncrementalDistances  # noqa: F401
+from .scenarios import SCENARIOS, Event, Trace  # noqa: F401

@@ -1,0 +1,512 @@
+"""Discrete-event churn engine over the incremental distance state.
+
+A :class:`ChurnEngine` replays a :class:`Trace` (timestamped Join / Leave /
+Fail / LatencyDrift / Straggler events — see ``dynamics.scenarios``) against
+an overlay maintained by an :class:`OverlayPolicy` (DGRO, Chord, RAPID or
+Perigee rules) on top of :class:`~repro.dynamics.incremental.IncrementalDistances`.
+
+Membership-plane wiring (the paper's application layer):
+
+* **Fail -> Leave**: a crash is not actionable until SWIM detects and
+  confirms it — ``detect_failures=True`` asks
+  ``repro.membership.gossip.confirmed_leave_time`` for the confirmation
+  delay and schedules the Leave then; until confirmation the dead node is
+  still routed through (the honest stale view).
+* **Straggler demotion**: Straggler events inflate a node's latencies; the
+  DGRO policy demotes nodes flagged by
+  ``repro.membership.elastic.detect_stragglers`` (treated as Leave for the
+  overlay, exactly like the elastic layer's mesh rule).
+* **DGRO self-repair**: after every ``adapt_every`` confirmed membership
+  changes the DGRO policy runs ``repro.core.selection.adapt_overlay`` over
+  the live fleet; the winning ring's edges are applied as incremental
+  relaxations, so the distance matrix never needs a from-scratch rebuild
+  for repair.
+
+Traces are plain data and replay deterministically: engine randomness comes
+from one ``numpy`` Generator seeded at construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import selection
+from repro.core.construction import default_num_rings, nearest_ring
+from repro.core.diameter import adjacency_from_edges, is_edge, ring_edges
+from repro.membership.elastic import HostState, detect_stragglers
+from repro.membership.gossip import SwimConfig, confirmed_leave_time
+
+from .incremental import IncrementalDistances
+from .scenarios import Event, N_FABRIC_SITES, Trace
+
+__all__ = [
+    "TrajectorySample",
+    "RunResult",
+    "OverlayPolicy",
+    "RingOverlayPolicy",
+    "DGROPolicy",
+    "ChordPolicy",
+    "RapidPolicy",
+    "PerigeePolicy",
+    "POLICIES",
+    "ChurnEngine",
+]
+
+Edge = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectorySample:
+    time: float
+    event: str
+    n_live: int
+    diameter: float
+
+
+@dataclasses.dataclass
+class RunResult:
+    policy: str
+    trace: str
+    samples: List[TrajectorySample]
+    final_diameter: float            # exact (post-refresh)
+    stats: Dict[str, int]
+
+    @property
+    def mean_diameter(self) -> float:
+        if not self.samples:           # run(record=False) keeps no samples
+            return float("nan")
+        return float(np.mean([s.diameter for s in self.samples]))
+
+    @property
+    def peak_diameter(self) -> float:
+        if not self.samples:
+            return float("nan")
+        return float(np.max([s.diameter for s in self.samples]))
+
+
+# ---------------------------------------------------------------------------
+# overlay policies
+# ---------------------------------------------------------------------------
+
+class OverlayPolicy:
+    """How a protocol builds its overlay and reacts to membership changes.
+
+    All node ids are *global* capacity-slot indices.  Policies only ever ADD
+    edges between live nodes on join/repair — removals happen exclusively
+    through tombstoning the departed node, which keeps every repair an exact
+    incremental relaxation.
+    """
+
+    name = "base"
+    demotes_stragglers = False
+
+    def build(self, w: np.ndarray, live: np.ndarray,
+              rng: np.random.Generator) -> List[Edge]:
+        raise NotImplementedError
+
+    def attach(self, w: np.ndarray, live: np.ndarray,
+               rng: np.random.Generator, u: int) -> List[Edge]:
+        raise NotImplementedError
+
+    def detach(self, u: int, rng: np.random.Generator) -> List[Edge]:
+        raise NotImplementedError
+
+    def maybe_adapt(self, engine: "ChurnEngine") -> None:
+        return None
+
+
+class RingOverlayPolicy(OverlayPolicy):
+    """Union-of-K-rings overlays with splice joins and stitch repairs.
+
+    ``rings`` holds cyclic node-id lists.  A join splices the new node into
+    each ring next to a chosen anchor ("random" position, or the "nearest"
+    live ring member by latency); the anchor's old successor edge is kept —
+    the overlay stays a supergraph of its rings, matching how neighbour
+    tables grow before pruning.  A leave removes the node from each ring and
+    stitches predecessor to successor.
+    """
+
+    name = "rings"
+    ring_kinds: Sequence[str] = ("random", "random")
+    splice = "random"
+
+    def __init__(self, k_rings: int | None = None):
+        self.k_rings = k_rings
+        self.rings: List[List[int]] = []
+
+    def _make_ring(self, kind: str, w: np.ndarray, live: np.ndarray,
+                   rng: np.random.Generator) -> List[int]:
+        if kind == "random":
+            return [int(x) for x in rng.permutation(live)]
+        assert kind == "nearest", kind
+        sub = w[np.ix_(live, live)]
+        perm = nearest_ring(sub, start=int(rng.integers(len(live))))
+        return [int(live[i]) for i in perm]
+
+    @staticmethod
+    def _ring_edges(ring: Sequence[int]) -> List[Edge]:
+        return [(int(u), int(v)) for u, v in ring_edges(np.asarray(ring))]
+
+    def _kinds(self, n: int) -> Sequence[str]:
+        k = self.k_rings or default_num_rings(n)
+        kinds = list(self.ring_kinds)
+        return [kinds[i % len(kinds)] for i in range(k)]
+
+    def build(self, w, live, rng) -> List[Edge]:
+        self.rings = [self._make_ring(kind, w, live, rng)
+                      for kind in self._kinds(len(live))]
+        return [e for ring in self.rings for e in self._ring_edges(ring)]
+
+    def _splice(self, ring: List[int], w, rng, u: int) -> List[Edge]:
+        if not ring:                 # fleet fully drained: joiner re-seeds it
+            ring.append(u)
+            return []
+        if self.splice == "nearest":
+            anchor = min(range(len(ring)), key=lambda i: w[u, ring[i]])
+        else:
+            anchor = int(rng.integers(len(ring)))
+        succ = ring[(anchor + 1) % len(ring)]
+        pred = ring[anchor]
+        ring.insert(anchor + 1, u)
+        return [(pred, u), (u, succ)]
+
+    def attach(self, w, live, rng, u) -> List[Edge]:
+        return [e for ring in self.rings for e in self._splice(ring, w, rng, u)]
+
+    def detach(self, u, rng) -> List[Edge]:
+        repairs: List[Edge] = []
+        for ring in self.rings:
+            if u not in ring:
+                continue
+            i = ring.index(u)
+            pred, succ = ring[i - 1], ring[(i + 1) % len(ring)]
+            ring.remove(u)
+            if pred != succ and pred != u and succ != u:
+                repairs.append((pred, succ))
+        return repairs
+
+
+class DGROPolicy(RingOverlayPolicy):
+    """DGRO: nearest + random rings, latency-aware splices, and periodic
+    Algorithm-3 ring-selection repair applied as incremental relaxations."""
+
+    name = "dgro"
+    ring_kinds = ("nearest", "random")
+    splice = "nearest"
+    demotes_stragglers = True
+
+    def __init__(self, k_rings: int | None = 2, adapt_every: int = 8):
+        super().__init__(k_rings)
+        self.adapt_every = adapt_every
+        self._changes_since_adapt = 0
+        self.adaptations = 0
+
+    def build(self, w, live, rng) -> List[Edge]:
+        # reset adaptation state so a policy instance reused across engines
+        # starts its cadence and stats fresh (build() already resets rings)
+        self._changes_since_adapt = 0
+        self.adaptations = 0
+        return super().build(w, live, rng)
+
+    def maybe_adapt(self, engine: "ChurnEngine") -> None:
+        self._changes_since_adapt += 1
+        if self._changes_since_adapt < self.adapt_every:
+            return
+        live = engine.inc.live_ids()
+        if len(live) < 4:
+            return                  # keep the pending count; adapt once viable
+        self._changes_since_adapt = 0
+        wl = engine.w[np.ix_(live, live)]
+        adjl = engine.inc.adj[np.ix_(live, live)]
+        seed = int(engine.rng.integers(2**31))
+        new_adj, kind, _rho = selection.adapt_overlay(wl, adjl, seed=seed)
+        if kind == "keep":
+            return
+        self.adaptations += 1
+        added = np.argwhere(np.triu(new_adj < adjl, 1))
+        for i, j in added:
+            engine.inc.add_edge(int(live[i]), int(live[j]),
+                                float(new_adj[i, j]))
+
+
+class ChordPolicy(RingOverlayPolicy):
+    """Chord: one identifier-space ring plus power-of-two finger edges.
+
+    Joins splice at a random identifier position and add the joiner's own
+    fingers; other nodes' fingers are repaired lazily (dead targets vanish
+    with the tombstone), which is how Chord's periodic fixups behave between
+    stabilization rounds.
+    """
+
+    name = "chord"
+    ring_kinds = ("random",)
+    splice = "random"
+
+    def __init__(self):
+        super().__init__(k_rings=1)
+
+    def _fingers(self, u: int) -> List[Edge]:
+        ring = self.rings[0]
+        n = len(ring)
+        pos = ring.index(u)
+        edges = []
+        j = 1
+        while (1 << j) < n:
+            edges.append((u, ring[(pos + (1 << j)) % n]))
+            j += 1
+        return edges
+
+    def build(self, w, live, rng) -> List[Edge]:
+        edges = super().build(w, live, rng)
+        for u in self.rings[0]:
+            edges.extend(self._fingers(u))
+        return edges
+
+    def attach(self, w, live, rng, u) -> List[Edge]:
+        edges = super().attach(w, live, rng, u)
+        edges.extend(self._fingers(u))
+        return edges
+
+
+class RapidPolicy(RingOverlayPolicy):
+    """RAPID: K independent consistent-hash (random) rings."""
+
+    name = "rapid"
+    ring_kinds = ("random",)
+    splice = "random"
+
+    def __init__(self, k_rings: int | None = None):
+        super().__init__(k_rings)
+
+
+class PerigeePolicy(RingOverlayPolicy):
+    """Perigee: per-node d lowest-latency neighbours + one connectivity ring."""
+
+    name = "perigee"
+    ring_kinds = ("random",)
+    splice = "random"
+
+    def __init__(self, degree: int | None = None):
+        super().__init__(k_rings=1)
+        self.degree = degree
+
+    def _nearest_edges(self, w, live, u: int) -> List[Edge]:
+        d = self.degree or default_num_rings(len(live))
+        others = live[live != u]
+        order = others[np.argsort(w[u, others], kind="stable")]
+        return [(u, int(v)) for v in order[:d]]
+
+    def build(self, w, live, rng) -> List[Edge]:
+        edges = super().build(w, live, rng)
+        for u in live:
+            edges.extend(self._nearest_edges(w, live, int(u)))
+        return edges
+
+    def attach(self, w, live, rng, u) -> List[Edge]:
+        edges = super().attach(w, live, rng, u)
+        edges.extend(self._nearest_edges(w, live, u))
+        return edges
+
+
+POLICIES = {
+    "dgro": DGROPolicy,
+    "chord": ChordPolicy,
+    "rapid": RapidPolicy,
+    "perigee": PerigeePolicy,
+}
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ChurnEngine:
+    """Replay a churn trace against a policy-maintained overlay."""
+
+    def __init__(self, trace: Trace, policy: OverlayPolicy, *,
+                 rebuild_threshold: int = 8, mode: str = "incremental",
+                 detect_failures: bool = False,
+                 swim: SwimConfig | None = None,
+                 straggler_factor: float = 3.0, seed: int = 0):
+        self.trace = trace
+        self.policy = policy
+        self.rng = np.random.default_rng(seed)
+        self.swim = swim or SwimConfig()
+        self.detect_failures = detect_failures
+        self.straggler_factor = straggler_factor
+
+        self.w_base = trace.latency()
+        c = trace.capacity
+        self.latency_factor = np.ones(c, np.float32)   # straggler inflation
+        self.drift_scale = np.ones(c, np.float32)      # per-node drift factor
+        alive = np.zeros(c, bool)
+        alive[:trace.n0] = True
+
+        w = self.w_base.copy()
+        adj = adjacency_from_edges(
+            w, policy.build(w, np.flatnonzero(alive), self.rng))
+        self.inc = IncrementalDistances(
+            w, adj, alive, rebuild_threshold=rebuild_threshold, mode=mode)
+        self._seq = 0
+        self._ran = False
+        self._pending_failed: set[int] = set()
+
+    # -- conveniences -----------------------------------------------------
+
+    @property
+    def w(self) -> np.ndarray:
+        return self.inc.w
+
+    @property
+    def alive(self) -> np.ndarray:
+        return self.inc.alive
+
+    def live_ids(self) -> np.ndarray:
+        return self.inc.live_ids()
+
+    def host_states(self) -> List[HostState]:
+        """Per-slot membership view for the elastic layer (``plan_rescale``):
+        EWMA latency stands in for heartbeat RTT via the straggler factor."""
+        return [HostState(i, alive=bool(self.alive[i]),
+                          ewma_ms=float(self.latency_factor[i]))
+                for i in range(self.inc.capacity)]
+
+    # -- event handlers ---------------------------------------------------
+
+    def _push(self, heap, t: float, event: Event) -> None:
+        self._seq += 1
+        heapq.heappush(heap, (t, self._seq, event))
+
+    def _confirmed_leave(self, u: int) -> None:
+        if not self.alive[u]:
+            return
+        repairs = self.policy.detach(u, self.rng)
+        self.inc.leave(u)
+        self._pending_failed.discard(u)
+        for a, b in repairs:
+            if self.alive[a] and self.alive[b]:
+                self.inc.add_edge(a, b)
+        self.policy.maybe_adapt(self)
+
+    def _handle_join(self, u: int) -> None:
+        if self.alive[u]:
+            return
+        live = self.live_ids()
+        edges = self.policy.attach(self.w, live, self.rng, u)
+        nbrs = set()
+        for a, b in edges:
+            if u not in (a, b):
+                raise ValueError(
+                    f"attach() must return edges incident to the joiner "
+                    f"{u}; got {(a, b)}")
+            nbrs.add(b if a == u else a)
+        nbrs.discard(u)
+        self.inc.join(u, sorted(nbrs))
+        self.policy.maybe_adapt(self)
+
+    def _handle_fail(self, heap, t: float, u: int) -> None:
+        if not self.alive[u] or u in self._pending_failed:
+            return
+        if not self.detect_failures:
+            self._confirmed_leave(u)
+            return
+        # crashed-but-unconfirmed peers cannot probe or relay: the SWIM
+        # detection runs on the live view minus the other pending victims
+        live = self.live_ids()
+        obs = live[~np.isin(live, list(self._pending_failed))]
+        pos = int(np.searchsorted(obs, u))
+        t_conf = confirmed_leave_time(
+            self.inc.adj[np.ix_(obs, obs)], pos, t_fail=t, cfg=self.swim,
+            seed=int(self.rng.integers(2**31)))
+        self._pending_failed.add(u)
+        self._push(heap, t_conf, Event(time=t_conf, kind="leave", node=u))
+
+    def _scaled_w(self) -> np.ndarray:
+        f = self.latency_factor * self.drift_scale
+        w = self.w_base * f[:, None] * f[None, :]
+        np.fill_diagonal(w, 0.0)
+        return w.astype(np.float32)
+
+    def _handle_drift(self, factor: float, region: int) -> None:
+        """Latency drift via per-NODE factors: each hit node gets the
+        absolute factor ``sqrt(factor)``, and a link scales by the product
+        of its endpoints' factors.  Globally (``region < 0``) every link
+        scales by exactly ``factor``; for a regional event only the hit
+        FABRIC site's intra-site links get the full ``factor`` while
+        cross-site links get ``sqrt(factor)`` (one congested endpoint).
+        Factors don't compound across events (each drift event overwrites
+        the hit nodes' values) and persist through straggler rescales."""
+        site_of = np.arange(self.inc.capacity) % N_FABRIC_SITES
+        hit = site_of == region if region >= 0 else np.ones(
+            self.inc.capacity, bool)
+        self.drift_scale = np.where(
+            hit, np.float32(np.sqrt(factor)), self.drift_scale)
+        self.inc.apply_latency_matrix(self._scaled_w())
+
+    def _handle_straggler(self, u: int, factor: float) -> None:
+        self.latency_factor[u] *= np.float32(factor)
+        # demote BEFORE re-weighting: detection only needs latency_factor,
+        # and demoted nodes' inflated rows then never enter the rebuild
+        if self.policy.demotes_stragglers:
+            live_hosts = [h for h in self.host_states() if h.alive]
+            for sid in detect_stragglers(live_hosts, self.straggler_factor):
+                if self.inc.n_live > 3:
+                    self._confirmed_leave(sid)
+        new_w = self._scaled_w()
+        self.inc.w = new_w                  # bulk latency bookkeeping
+        if self.alive[u]:
+            # only u's incident edges changed weight: route them through
+            # set_latency (relax on decrease, bounded staleness on increase)
+            # instead of a full apply_latency_matrix rebuild
+            for v in np.flatnonzero(is_edge(self.inc.adj[u])):
+                self.inc.set_latency(u, int(v), float(new_w[u, v]))
+        # demoted: only the tombstoned node's rows changed — nothing to do
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self, record: bool = True,
+            sample_exact: bool = False) -> RunResult:
+        """Replay the trace.  ``sample_exact`` refreshes pending deletions
+        before every recorded sample so trajectories report true diameters
+        rather than the maintenance lower bound — use it when comparing
+        policies (the sampling rebuilds then also land in stats)."""
+        if self._ran:
+            raise RuntimeError(
+                "ChurnEngine.run() consumed its trace against mutated state; "
+                "construct a fresh engine to replay")
+        self._ran = True
+        heap: List[Tuple[float, int, Event]] = []
+        for e in sorted(self.trace.events, key=lambda e: e.time):
+            self._push(heap, e.time, e)
+        samples: List[TrajectorySample] = []
+        if record:
+            samples.append(TrajectorySample(
+                0.0, "init", self.inc.n_live,
+                self.inc.diameter(exact=sample_exact)))
+        while heap:
+            t, _, e = heapq.heappop(heap)
+            if e.kind == "join":
+                self._handle_join(e.node)
+            elif e.kind == "leave":
+                self._confirmed_leave(e.node)
+            elif e.kind == "fail":
+                self._handle_fail(heap, t, e.node)
+            elif e.kind == "latency_drift":
+                self._handle_drift(e.factor, e.region)
+            elif e.kind == "straggler":
+                self._handle_straggler(e.node, e.factor)
+            else:
+                raise ValueError(f"unknown event kind {e.kind!r}")
+            if record:
+                samples.append(TrajectorySample(
+                    t, e.kind, self.inc.n_live,
+                    self.inc.diameter(exact=sample_exact)))
+        stats = dict(self.inc.stats)     # churn cost only: snapshot before
+        final = self.inc.diameter(exact=True)  # ... the exactness refresh
+        if isinstance(self.policy, DGROPolicy):
+            stats["adaptations"] = self.policy.adaptations
+        return RunResult(policy=self.policy.name, trace=self.trace.name,
+                         samples=samples, final_diameter=final, stats=stats)

@@ -1,0 +1,300 @@
+"""Incremental APSP / diameter maintenance under churn.
+
+The static stack (``repro.core.diameter`` / ``repro.core.batcheval``)
+recomputes all-pairs distances from scratch — O(N^3) per overlay.  Under
+churn most events touch one node or one edge, and the distance matrix can
+be repaired far cheaper:
+
+* **edge insert** (and any latency *decrease*): the O(N^2) relaxation
+  ``D' = min(D, D[:,u] + w_uv + D[v,:], D[:,v] + w_uv + D[u,:])`` is exact —
+  with positive weights a new shortest path crosses the new edge at most
+  once.
+* **node join**: activate a tombstoned capacity slot, compute the new row
+  by one min-plus vector step over the attach edges, then relax all pairs
+  through the new node — O(N^2) total, exact for the same reason.
+* **node leave** (and any latency *increase*): distances can only grow,
+  which a relaxation cannot express.  The node is tombstoned (isolated in
+  the adjacency, its distance row/col set to INF) and a bounded staleness
+  counter is incremented; when accumulated deletions exceed
+  ``rebuild_threshold`` a full batched rebuild runs through
+  ``repro.core.batcheval``.  Between rebuilds the matrix is a *lower
+  bound*: stale entries may still use paths through departed nodes, so
+  ``D_stale <= D_true`` elementwise — ``refresh()`` restores exactness on
+  demand.
+
+All device math is jit'd with static shapes: the state is allocated at a
+fixed ``capacity`` and dead slots are isolated singletons, which the
+largest-connected-component diameter rule (paper §IV-C) ignores.  The
+``*_batched`` variants advance B independent scenario replicas in one
+device call (vmap over the batch axis — the same grid-over-batch shape as
+``kernels.minplus.minplus_batched``; the relax itself is a broadcast
+min-add, so no Pallas tile is needed) and ``relax_edge_stream_batched``
+folds a whole (T, B) insert trace into a single ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batcheval
+from repro.core.diameter import INF, is_edge, largest_cc_diameter
+
+__all__ = [
+    "relax_edge",
+    "relax_edges_batched",
+    "relax_edge_stream_batched",
+    "join_node",
+    "join_nodes_batched",
+    "tombstone",
+    "tombstones_batched",
+    "IncrementalDistances",
+]
+
+
+# ---------------------------------------------------------------------------
+# jit'd pure updates (single replica + vmapped batch variants)
+# ---------------------------------------------------------------------------
+
+def _relax_edge_impl(dist: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
+                     wuv: jnp.ndarray) -> jnp.ndarray:
+    """Exact O(N^2) repair of an APSP matrix after inserting edge (u, v)."""
+    du = dist[:, u]                       # distances into u
+    dv = dist[:, v]
+    via = jnp.minimum(du[:, None] + wuv + dist[v, :][None, :],
+                      dv[:, None] + wuv + dist[u, :][None, :])
+    return jnp.minimum(dist, via)
+
+
+def _join_node_impl(dist: jnp.ndarray, row: jnp.ndarray,
+                    u: jnp.ndarray) -> jnp.ndarray:
+    """Activate node ``u`` (previously isolated) with one-hop weights ``row``
+    (INF where no attach edge).  Exact: a shortest path visits u at most
+    once, so u's row is one min-plus vector step over exact old distances
+    and every other pair improves only via ``d(i,u) + d(u,j)``."""
+    du = jnp.min(row[:, None] + dist, axis=0)      # d(u, j) over attach edges
+    du = du.at[u].set(0.0)
+    dist = dist.at[u, :].set(jnp.minimum(dist[u, :], du))
+    dist = dist.at[:, u].set(jnp.minimum(dist[:, u], du))
+    return jnp.minimum(dist, du[:, None] + du[None, :])
+
+
+def _tombstone_impl(dist: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Isolate node ``u`` in the distance matrix (INF row/col, 0 self)."""
+    c = dist.shape[0]
+    iso = jnp.full((c,), INF, dist.dtype).at[u].set(0.0)
+    return dist.at[u, :].set(iso).at[:, u].set(iso)
+
+
+relax_edge = jax.jit(_relax_edge_impl)
+join_node = jax.jit(_join_node_impl)
+tombstone = jax.jit(_tombstone_impl)
+
+# batched: (B, C, C) distance stacks advanced in one device call
+relax_edges_batched = jax.jit(jax.vmap(_relax_edge_impl))
+join_nodes_batched = jax.jit(jax.vmap(_join_node_impl))
+tombstones_batched = jax.jit(jax.vmap(_tombstone_impl))
+
+
+@jax.jit
+def relax_edge_stream_batched(dists: jnp.ndarray, us: jnp.ndarray,
+                              vs: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
+    """Apply a (T, B) stream of edge inserts to (B, C, C) replicas in ONE
+    device call: ``lax.scan`` over time, vmap over the batch."""
+    def step(d, uvw):
+        u, v, w = uvw
+        return jax.vmap(_relax_edge_impl)(d, u, v, w), None
+
+    out, _ = jax.lax.scan(step, dists, (us, vs, ws))
+    return out
+
+
+_cc_diameter = jax.jit(largest_cc_diameter)
+
+
+# ---------------------------------------------------------------------------
+# host-side stateful wrapper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IncrementalDistances:
+    """Churn-maintained overlay adjacency + APSP distance matrix.
+
+    ``mode="incremental"`` applies the O(N^2) repairs above and amortizes
+    deletions through the staleness counter; ``mode="full"`` rebuilds from
+    scratch (through ``batcheval``) after every mutation — the baseline the
+    ``fig16_churn`` benchmark compares against.
+    """
+
+    w: np.ndarray                    # (C, C) latency matrix, mutable
+    adj: np.ndarray                  # (C, C) overlay, INF non-edges, 0 diag
+    alive: np.ndarray                # (C,) bool; dead slots are isolated
+    rebuild_threshold: int = 8       # deletions tolerated before a rebuild
+    mode: str = "incremental"        # "incremental" | "full"
+
+    def __post_init__(self):
+        assert self.mode in ("incremental", "full"), self.mode
+        self.w = np.asarray(self.w, np.float32).copy()
+        self.adj = np.asarray(self.adj, np.float32).copy()
+        c = self.w.shape[0]
+        assert self.adj.shape == (c, c), (self.adj.shape, c)
+        if self.alive is None:
+            self.alive = np.ones(c, bool)
+        self.alive = np.asarray(self.alive, bool).copy()
+        # isolate dead slots so they are singleton components
+        dead = np.flatnonzero(~self.alive)
+        self.adj[dead, :] = float(INF)
+        self.adj[:, dead] = float(INF)
+        self.adj[np.arange(c), np.arange(c)] = 0.0
+        self.pending_deletions = 0
+        self.stats: Dict[str, int] = {"relaxations": 0, "joins": 0,
+                                      "leaves": 0, "rebuilds": 0,
+                                      "events": 0}
+        self._dist: Optional[jnp.ndarray] = None
+        self.rebuild()
+        self.stats["rebuilds"] = 0       # the initial APSP is not churn cost
+
+    # -- queries ----------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    def live_ids(self) -> np.ndarray:
+        return np.flatnonzero(self.alive)
+
+    @property
+    def distances(self) -> np.ndarray:
+        """Current (C, C) distance matrix.  Exact when no deletions are
+        pending; otherwise an elementwise lower bound on the live truth."""
+        return np.asarray(self._dist)
+
+    def live_distances(self) -> np.ndarray:
+        live = self.live_ids()
+        return self.distances[np.ix_(live, live)]
+
+    def diameter(self, exact: bool = False) -> float:
+        """Largest-CC diameter of the maintained overlay.  ``exact`` forces
+        a rebuild first if deletions are pending."""
+        if exact:
+            self.refresh()
+        return float(_cc_diameter(self._dist))
+
+    # -- mutations --------------------------------------------------------
+
+    def add_edge(self, u: int, v: int, weight: float | None = None) -> None:
+        """Insert (or improve) the undirected edge (u, v)."""
+        assert self.alive[u] and self.alive[v], (u, v)
+        wuv = np.float32(self.w[u, v] if weight is None else weight)
+        self.stats["events"] += 1
+        if u == v or wuv >= self.adj[u, v]:
+            return                        # no improvement: relax is a no-op
+        self.adj[u, v] = self.adj[v, u] = wuv
+        if self.mode == "full":
+            self.rebuild()
+            return
+        self._dist = relax_edge(self._dist, u, v, wuv)
+        self.stats["relaxations"] += 1
+
+    def remove_edge(self, u: int, v: int) -> None:
+        """Delete the undirected edge (u, v); distances may go stale."""
+        self.stats["events"] += 1
+        if not is_edge(np.float32(self.adj[u, v])):
+            return
+        self.adj[u, v] = self.adj[v, u] = float(INF)
+        self._note_deletion()
+
+    def join(self, u: int, neighbours: Sequence[int],
+             weights: Sequence[float] | None = None) -> None:
+        """Activate slot ``u`` and attach it to live ``neighbours``."""
+        assert not self.alive[u], u
+        nbrs = np.asarray(list(neighbours), np.intp)
+        assert self.alive[nbrs].all(), "attach edges must target live nodes"
+        ws = (self.w[u, nbrs] if weights is None
+              else np.asarray(list(weights), np.float32))
+        self.alive[u] = True
+        self.adj[u, nbrs] = np.minimum(self.adj[u, nbrs], ws)
+        self.adj[nbrs, u] = self.adj[u, nbrs]
+        self.stats["events"] += 1
+        self.stats["joins"] += 1
+        if self.mode == "full":
+            self.rebuild()
+            return
+        row = np.full(self.capacity, float(INF), np.float32)
+        row[nbrs] = self.adj[u, nbrs]
+        self._dist = join_node(self._dist, jnp.asarray(row), u)
+        self.stats["relaxations"] += 1
+
+    def leave(self, u: int) -> None:
+        """Tombstone node ``u``: isolate it and count the deletion."""
+        if not self.alive[u]:
+            return
+        self.alive[u] = False
+        self.adj[u, :] = float(INF)
+        self.adj[:, u] = float(INF)
+        self.adj[u, u] = 0.0
+        self.stats["events"] += 1
+        self.stats["leaves"] += 1
+        if self.mode != "full":        # full mode rebuilds anyway below
+            self._dist = tombstone(self._dist, u)
+        self._note_deletion()
+
+    def set_latency(self, u: int, v: int, ms: float) -> None:
+        """Point latency change; decreases relax, increases count as stale.
+
+        The increase/decrease split compares against the CURRENT edge
+        weight (``adj``, which ``add_edge`` may have set below ``w``) —
+        comparing against ``w`` could misread an edge-weight increase as a
+        decrease and break the lower-bound contract."""
+        ms = float(ms)
+        self.w[u, v] = self.w[v, u] = ms
+        if not is_edge(np.float32(self.adj[u, v])):
+            return
+        old_edge = float(self.adj[u, v])
+        self.stats["events"] += 1
+        self.adj[u, v] = self.adj[v, u] = np.float32(ms)
+        if self.mode == "full":
+            self.rebuild()
+        elif ms < old_edge:
+            self._dist = relax_edge(self._dist, u, v, np.float32(ms))
+            self.stats["relaxations"] += 1
+        elif ms > old_edge:
+            self._note_deletion()
+
+    def apply_latency_matrix(self, new_w: np.ndarray) -> None:
+        """Bulk latency change (e.g. diurnal drift): re-weight every existing
+        edge and rebuild — a matrix-wide shift has no cheap exact repair."""
+        new_w = np.asarray(new_w, np.float32)
+        assert new_w.shape == self.w.shape
+        self.w = new_w.copy()
+        mask = is_edge(self.adj)
+        self.adj = np.where(mask, new_w, self.adj).astype(np.float32)
+        self.stats["events"] += 1
+        self.rebuild()
+
+    # -- rebuild machinery ------------------------------------------------
+
+    def _note_deletion(self) -> None:
+        self.pending_deletions += 1
+        if self.mode == "full" or self.pending_deletions >= self.rebuild_threshold:
+            self.rebuild()
+
+    def rebuild(self) -> None:
+        """Full from-scratch APSP over the live adjacency, one batched
+        ``batcheval`` device call; resets the staleness counter."""
+        self._dist = batcheval.batched_apsp(jnp.asarray(self.adj[None]))[0]
+        self.pending_deletions = 0
+        self.stats["rebuilds"] += 1
+
+    def refresh(self) -> None:
+        """Restore exactness if deletions are pending."""
+        if self.pending_deletions:
+            self.rebuild()

@@ -106,3 +106,26 @@ def plan_rescale(
     return RescalePlan(hosts=ordered, mesh_shape=(pods, data, model),
                        ring_kind=kind, rho=rho, shard_remap=remap,
                        expected_step_time_factor=factor)
+
+
+def plan_rescale_from_engine(
+    engine,
+    *,
+    model_hosts: int = 1,
+    old_world: Optional[int] = None,
+    straggler_factor: Optional[float] = None,
+    seed: int = 0,
+) -> RescalePlan:
+    """Rescale plan driven by a ``repro.dynamics.ChurnEngine``'s live state.
+
+    The engine's alive mask and per-node latency factors (its straggler
+    view, updated by Straggler events) replace the hand-maintained
+    ``HostState`` list: after replaying a churn trace, the surviving fleet
+    and its current latency matrix feed directly into ``plan_rescale``.
+    ``straggler_factor`` defaults to the engine's own demotion threshold so
+    the plan agrees with the replay about who counts as a straggler."""
+    if straggler_factor is None:
+        straggler_factor = engine.straggler_factor
+    return plan_rescale(engine.w, engine.host_states(),
+                        model_hosts=model_hosts, old_world=old_world,
+                        straggler_factor=straggler_factor, seed=seed)

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.diameter import INF
+from repro.core.diameter import is_edge, neighbour_lists
 
 
 @dataclasses.dataclass
@@ -32,7 +32,7 @@ class GossipEvent:
 
 
 def neighbours(adj: np.ndarray, u: int) -> np.ndarray:
-    return np.flatnonzero((adj[u] > 0) & (adj[u] < float(INF) / 2))
+    return np.flatnonzero(is_edge(adj[u]))
 
 
 def disseminate(
@@ -53,6 +53,7 @@ def disseminate(
     """
     n = adj.shape[0]
     rng = np.random.default_rng(seed)
+    neigh = neighbour_lists(adj)
     recv = np.full(n, np.inf)
     recv[source] = 0.0
     heap: List[Tuple[float, int]] = [(0.0, source)]
@@ -63,7 +64,7 @@ def disseminate(
         t, u = heapq.heappop(heap)
         if t > recv[u]:
             continue
-        targets = list(neighbours(adj, u))
+        targets = list(neigh[u])
         extra = rng.choice(n, size=min(fanout, n), replace=False)
         targets.extend(int(e) for e in extra if e != u)
         for v in targets:
@@ -96,6 +97,22 @@ class DetectionResult:
     t_all_know: float                 # dissemination complete
 
 
+def _swim_detection(adj: np.ndarray, failed: int, cfg: SwimConfig,
+                    rng: np.random.Generator) -> Tuple[float, int]:
+    """SWIM probe detection alone: (suspect time, detector node).
+
+    Each ring neighbour probes the dead node at a random phase of its
+    period; the direct probe times out, then the indirect probes do too."""
+    n = adj.shape[0]
+    nbrs = neighbours(adj, failed)
+    if len(nbrs) == 0:
+        nbrs = np.array([(failed + 1) % n])
+    phases = rng.uniform(0, cfg.probe_period, size=len(nbrs))
+    detect_times = phases + cfg.probe_timeout + cfg.probe_timeout
+    first = int(np.argmin(detect_times))
+    return float(detect_times[first]), int(nbrs[first])
+
+
 def simulate_failure_detection(
     adj: np.ndarray,
     w: np.ndarray,
@@ -108,18 +125,7 @@ def simulate_failure_detection(
     detection by the first ring neighbour whose probe window hits, then
     dissemination via ``disseminate`` from the detector."""
     rng = np.random.default_rng(seed)
-    n = adj.shape[0]
-    nbrs = neighbours(adj, failed)
-    if len(nbrs) == 0:
-        nbrs = np.array([(failed + 1) % n])
-    # each neighbour probes the failed node at a random phase of its period
-    phases = rng.uniform(0, cfg.probe_period, size=len(nbrs))
-    rtt = 2.0 * w[failed, nbrs]
-    # direct probe fails (timeout), then indirect probes also fail
-    detect_times = phases + cfg.probe_timeout + cfg.probe_timeout
-    first = int(np.argmin(detect_times))
-    t_suspect = float(detect_times[first])
-    detector = int(nbrs[first])
+    t_suspect, detector = _swim_detection(adj, failed, cfg, rng)
     t_confirm = t_suspect + cfg.suspect_timeout
     t_diss, _ = disseminate(adj, w, detector, seed=seed, coverage=0.99)
     return DetectionResult(
@@ -128,3 +134,24 @@ def simulate_failure_detection(
         t_confirmed=t_confirm,
         t_all_know=t_confirm + t_diss,
     )
+
+
+def confirmed_leave_time(
+    adj: np.ndarray,
+    failed: int,
+    t_fail: float = 0.0,
+    cfg: SwimConfig = SwimConfig(),
+    seed: int = 0,
+) -> float:
+    """Absolute time at which a crash at ``t_fail`` becomes an actionable
+    membership change: SWIM probe detection + suspect->confirm timeout.
+
+    This is the bridge into ``repro.dynamics``: the churn engine turns a
+    Fail event into a Leave event scheduled at this time, so the overlay
+    keeps routing through the dead node until the gossip plane has actually
+    confirmed the failure.  Only detection is simulated — the dissemination
+    sweep of ``simulate_failure_detection`` (which this rng-matches) feeds
+    ``t_all_know``, a quantity the confirmation time never uses."""
+    rng = np.random.default_rng(seed)
+    t_suspect, _ = _swim_detection(adj, failed, cfg, rng)
+    return t_fail + t_suspect + cfg.suspect_timeout
