@@ -11,8 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core.construction import random_ring
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro import overlay
 from repro.core.qlearning import DQNConfig, train_dqn
 from repro.core.topology import make_latency
 
@@ -28,9 +27,9 @@ def run(n: int = 14, epochs: int = 120, k_rings: int = 2, seed: int = 0,
 
     rng = np.random.default_rng(seed)
     rand_d = np.mean([
-        diameter_scipy(adjacency_from_rings(
-            make_latency(dist, n, seed=10_000 + i),
-            [random_ring(rng, n) for _ in range(k_rings)]))
+        overlay.build("random", make_latency(dist, n, seed=10_000 + i),
+                      overlay.RandomRingsConfig(k=k_rings),
+                      rng=rng).diameter()
         for i in range(3)])
 
     print("epoch,train_diam,test_diam,loss")

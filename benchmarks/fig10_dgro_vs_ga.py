@@ -11,10 +11,9 @@ import time
 
 import numpy as np
 
-from repro.core.construction import random_ring
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
+from repro import overlay
 from repro.core.ga import GAConfig, ga_search, random_search
-from repro.core.qlearning import DQNConfig, dgro_topology, train_dqn
+from repro.core.qlearning import DQNConfig, dgro_overlay, train_dqn
 from repro.core.topology import make_latency
 
 
@@ -30,10 +29,12 @@ def run(n: int = 14, epochs: int = 50, ga_budget: int = 1000,
     for g in range(n_graphs):
         w = make_latency("uniform", n, seed=500 + g)
         rng = np.random.default_rng(g)
-        d_rand = diameter_scipy(adjacency_from_rings(
-            w, [random_ring(rng, n) for _ in range(k_rings)]))
+        d_rand = overlay.build("random", w,
+                               overlay.RandomRingsConfig(k=k_rings),
+                               rng=rng).diameter()
         t0 = time.time()
-        _, d_dgro = dgro_topology(params, cfg, w, n_starts=n_starts, seed=g)
+        d_dgro = dgro_overlay(params, cfg, w, n_starts=n_starts,
+                              seed=g).diameter()
         t_dgro = time.time() - t0
         t0 = time.time()
         _, d_ga, evals = ga_search(w, GAConfig(k_rings=k_rings,

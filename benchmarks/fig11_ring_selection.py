@@ -1,9 +1,10 @@
 """Paper Figs. 5/6/7 + 11/15: DGRO's adaptive ring selection reduces the
 diameter of Chord, RAPID and Perigee.
 
-For each protocol and network size we build the stock overlay (random /
-consistent-hash rings), measure rho (Alg. 3) and apply the selected ring
-swap; report the stock vs DGRO diameter.  ``--dist`` picks the latency
+For each protocol and network size we build the stock overlay through the
+``repro.overlay`` registry, measure rho (Alg. 3) and apply the selected ring
+swap (``Overlay.replace_rings`` / the builder's ``ring="nearest"`` knob);
+report the stock vs DGRO diameter.  ``--dist`` picks the latency
 distribution (uniform / gaussian = Fig. 11; fabric / bitnode = Fig. 15).
 """
 from __future__ import annotations
@@ -13,40 +14,34 @@ import time
 
 import numpy as np
 
-from repro.core import protocols
-from repro.core.construction import nearest_ring, random_ring
-from repro.core.diameter import (adjacency_from_edges, adjacency_from_rings,
-                                 diameter_scipy, ring_edges)
+from repro import overlay
+from repro.core.construction import nearest_ring
+from repro.core.diameter import diameter_scipy
 from repro.core.selection import (clustering_ratio, measure_latency_stats,
                                   select_ring_kind)
 from repro.core.topology import make_latency
 
 
 def _chord_overlays(w, rng):
-    n = w.shape[0]
-    perm = random_ring(rng, n)
-    def build(ring):
-        edges = list(ring_edges(ring))
-        j = 1
-        while (1 << j) < n:
-            for i in range(n):
-                edges.append((ring[i], ring[(i + (1 << j)) % n]))
-            j += 1
-        return adjacency_from_edges(w, edges)
-    stock = build(perm)
-    swapped = build(nearest_ring(w, start=int(rng.integers(n))))
+    stock = overlay.build("chord", w, overlay.ChordConfig(ring="random"),
+                          rng=rng)
+    swapped = overlay.build("chord", w, overlay.ChordConfig(ring="nearest"),
+                            rng=rng)
     return stock, swapped
 
 
 def _rapid_overlays(w, rng):
-    stock, rings = protocols.rapid(w, rng)
-    new_rings = [nearest_ring(w, start=int(rng.integers(w.shape[0])))] + rings[1:]
-    return stock, adjacency_from_rings(w, new_rings)
+    stock = overlay.build("rapid", w, rng=rng)
+    new_first = nearest_ring(w, start=int(rng.integers(w.shape[0])))
+    swapped = stock.replace_rings([new_first] + list(stock.rings[1:]))
+    return stock, swapped
 
 
 def _perigee_overlays(w, rng):
-    stock, _ = protocols.perigee(w, rng, ring_kind="nearest")
-    swapped, _ = protocols.perigee(w, rng, ring_kind="random")
+    stock = overlay.build("perigee", w, overlay.PerigeeConfig(ring="nearest"),
+                          rng=rng)
+    swapped = overlay.build("perigee", w, overlay.PerigeeConfig(ring="random"),
+                            rng=rng)
     return stock, swapped
 
 
@@ -63,11 +58,11 @@ def run(dist: str = "uniform", sizes=(50, 100, 200), seed: int = 0):
             w = make_latency(dist, n, seed=seed + n)
             rng = np.random.default_rng(seed)
             stock, swapped = build(w, rng)
-            stats = measure_latency_stats(w, stock, seed=seed)
+            stats = measure_latency_stats(w, stock.adjacency, seed=seed)
             rho = clustering_ratio(stats)
             kind = select_ring_kind(rho)
-            d_stock = diameter_scipy(stock)
-            d_swap = diameter_scipy(swapped)
+            d_stock = diameter_scipy(stock.adjacency)
+            d_swap = diameter_scipy(swapped.adjacency)
             # DGRO keeps the better per its selection; "keep" -> stock
             d_dgro = d_swap if kind != "keep" else min(d_stock, d_swap)
             imp = (d_stock - d_dgro) / d_stock

@@ -1,10 +1,12 @@
 """Paper Figs. 13/17: K-ring topology built by DGRO vs six baselines.
 
 Baselines: random K-ring, all-nearest K-ring, Chord, RAPID, Perigee(+ring),
-GA.  DGRO here = the paper's full pipeline at benchmark scale: adaptive
-mixed rings via rho-selection, best of several candidate mixes (the trained
-DQN covers n<=~50 in fig10; this sweep runs to n=300+ where the paper itself
-falls back to heuristic construction, §V).
+GA — every topology comes from the ``repro.overlay`` builder registry, so a
+new baseline is one ``@overlay.register`` away.  DGRO here = the registry's
+``"dgro"`` builder, the paper's full pipeline at benchmark scale: adaptive
+mixed rings via rho-selection, best of several candidate mixes scored in one
+batched device call (the trained DQN covers n<=~50 in fig10; this sweep runs
+to n=300+ where the paper itself falls back to heuristic construction, §V).
 """
 from __future__ import annotations
 
@@ -13,34 +15,10 @@ import time
 
 import numpy as np
 
-from repro.core import protocols
+from repro import overlay
 from repro.core.construction import default_num_rings, k_rings
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
-from repro.core.ga import GAConfig, ga_search
-from repro.core.selection import (clustering_ratio, measure_latency_stats,
-                                  select_ring_kind)
+from repro.core.ga import GAConfig
 from repro.core.topology import make_latency
-
-
-def dgro_adaptive(w, k, rng, n_candidates: int = 4):
-    """rho-guided mixed-ring construction: measure rho on a probe overlay,
-    shortlist M values near the indicated regime, keep the best diameter."""
-    n = w.shape[0]
-    probe = adjacency_from_rings(w, k_rings(w, k, "random", rng))
-    rho = clustering_ratio(measure_latency_stats(w, probe, seed=0))
-    kind = select_ring_kind(rho)
-    if kind == "nearest":      # too random -> mostly nearest rings
-        ms = range(0, min(2, k) + 1)
-    elif kind == "random":     # too clustered -> mostly random rings
-        ms = range(max(0, k - 2), k + 1)
-    else:
-        ms = range(0, k + 1, max(1, k // n_candidates))
-    best = np.inf
-    for m in ms:
-        rings = k_rings(w, k, f"mixed:{m}", rng)
-        d = diameter_scipy(adjacency_from_rings(w, rings))
-        best = min(best, d)
-    return best, rho
 
 
 def run(dist: str = "uniform", sizes=(50, 100, 200), ga_budget: int = 300,
@@ -52,13 +30,18 @@ def run(dist: str = "uniform", sizes=(50, 100, 200), ga_budget: int = 300,
         w = make_latency(dist, n, seed=seed + n)
         k = max(2, default_num_rings(n) // 2)
         rng = np.random.default_rng(seed)
-        d_dgro, rho = dgro_adaptive(w, k, rng)
-        d_rand = diameter_scipy(adjacency_from_rings(w, k_rings(w, k, "random", rng)))
-        d_near = diameter_scipy(adjacency_from_rings(w, k_rings(w, k, "nearest", rng)))
-        d_chord = diameter_scipy(protocols.chord(w, rng)[0])
-        d_rapid = diameter_scipy(protocols.rapid(w, rng, k)[0])
-        d_peri = diameter_scipy(protocols.perigee(w, rng)[0])
-        _, d_ga, _ = ga_search(w, GAConfig(k_rings=k, budget=ga_budget, seed=seed))
+        dgro = overlay.build("dgro", w, overlay.DGROConfig(k=k), rng=rng)
+        d_dgro = dgro.diameter()
+        d_rand = overlay.Overlay.from_rings(
+            w, k_rings(w, k, "random", rng)).diameter()
+        d_near = overlay.Overlay.from_rings(
+            w, k_rings(w, k, "nearest", rng)).diameter()
+        d_chord = overlay.build("chord", w, rng=rng).diameter()
+        d_rapid = overlay.build("rapid", w, overlay.RapidConfig(k=k),
+                                rng=rng).diameter()
+        d_peri = overlay.build("perigee", w, rng=rng).diameter()
+        d_ga = overlay.build("ga", w, GAConfig(k_rings=k, budget=ga_budget,
+                                               seed=seed)).diameter()
         print(f"{n},{d_dgro:.1f},{d_rand:.1f},{d_near:.1f},{d_chord:.1f},"
               f"{d_rapid:.1f},{d_peri:.1f},{d_ga:.1f}")
         if d_dgro <= min(d_rand, d_near) + 1e-9:

@@ -15,9 +15,9 @@ import time
 import numpy as np
 
 from repro.core import batcheval
-from repro.core.diameter import adjacency_from_rings
-from repro.core.parallel import parallel_ring_scored
+from repro.core.parallel import parallel_overlay
 from repro.core.topology import make_latency
+from repro.overlay import Overlay
 
 
 def run(dist: str = "uniform", n: int = 256,
@@ -37,12 +37,11 @@ def run(dist: str = "uniform", n: int = 256,
           "seq_steps")
     diams = {}
     for m in partitions:
-        perm, block_d = parallel_ring_scored(w, m, seed=seed,
-                                             score_blocks=True)
+        solo, block_d = parallel_overlay(w, m, seed=seed, score_blocks=True)
+        full = Overlay.from_rings(w, fixed + [solo.rings[0]])
         # full K-ring overlay + the built ring alone, one batched call
         d, d_solo = batcheval.diameters(np.stack([
-            adjacency_from_rings(w, fixed + [perm]),
-            adjacency_from_rings(w, [perm])]))
+            full.adjacency, solo.adjacency]))
         diams[m] = float(d)
         print(f"{m},{d:.1f},{d_solo:.1f},{block_d.max():.1f},{n // m}")
     wall = time.time() - t0

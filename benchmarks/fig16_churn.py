@@ -149,11 +149,17 @@ def run(n_gate: int = 128, gate_ops: int = 80, gate_threshold: int = 16,
     # ---- part B: scenario x policy diameter trajectories -----------------
     print("scenario,policy,events,n_live_end,mean_diam,peak_diam,final_diam,"
           "rebuilds")
+    results["initial_overlays"] = {}
     for sname, make in SCENARIOS.items():
         trace = make(n0=traj_n0, seed=seed + 3)
         for pname, P in POLICIES.items():
             eng = ChurnEngine(trace, P(), seed=seed + 4,
                               detect_failures=True)
+            if pname == "dgro":
+                # snapshot what the DGRO replay started from (replayable
+                # next to the trace JSON via Overlay.from_json)
+                results["initial_overlays"][sname] = json.loads(
+                    eng.initial_overlay.to_json())
             # exact sampling: trajectories compare true diameters across
             # policies, not the incremental maintenance lower bound
             res = eng.run(sample_exact=True)

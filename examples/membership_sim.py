@@ -7,8 +7,8 @@ repair, straggler demotion) and the surviving fleet feeds the rescale plan.
 """
 import numpy as np
 
+from repro import overlay
 from repro.core.construction import nearest_ring, random_ring
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
 from repro.core.topology import make_latency
 from repro.dynamics import ChurnEngine, DGROPolicy, Event, Trace
 from repro.membership.elastic import plan_rescale_from_engine
@@ -21,17 +21,18 @@ def main():
     rng = np.random.default_rng(0)
 
     overlays = {
-        "random ring (Chord-style)": adjacency_from_rings(
-            w, [random_ring(rng, n), random_ring(rng, n)]),
-        "DGRO ring (nearest+random)": adjacency_from_rings(
-            w, [nearest_ring(w, 0), random_ring(rng, n)]),
+        "random ring (Chord-style)": overlay.build(
+            "random", w, overlay.RandomRingsConfig(k=2), rng=rng),
+        "DGRO ring (nearest+random)": overlay.Overlay.from_rings(
+            w, [nearest_ring(w, 0), random_ring(rng, n)], policy="dgro"),
     }
     print(f"== membership plane over {n} geo-distributed hosts ==")
-    for name, adj in overlays.items():
-        d = diameter_scipy(adj)
+    for name, ov in overlays.items():
+        adj = ov.adjacency
         t_diss = np.mean([disseminate(adj, w, s, seed=s)[0] for s in range(6)])
         det = simulate_failure_detection(adj, w, failed=7)
-        print(f"{name:28s} diameter={d:7.1f}ms  dissemination={t_diss:7.1f}ms  "
+        print(f"{name:28s} diameter={ov.diameter():7.1f}ms  "
+              f"dissemination={t_diss:7.1f}ms  "
               f"failure: suspect@{det.t_first_suspect:.0f}ms "
               f"everyone-knows@{det.t_all_know:.0f}ms")
 

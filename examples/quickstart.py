@@ -2,15 +2,15 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a FABRIC-style 64-node fleet, compares ring constructions (random /
-nearest / DGRO-adaptive), runs the gossip latency measurement (Alg. 3) and
-the rho-based selection (§V), and shows the parallel construction (Alg. 4).
+Builds a FABRIC-style 64-node fleet through the ``repro.overlay`` API:
+compares ring constructions (random / nearest / DGRO-adaptive), runs the
+gossip latency measurement (Alg. 3) and the rho-based selection (§V), and
+shows the parallel construction (Alg. 4).
 """
 import numpy as np
 
-from repro.core.construction import k_rings, nearest_ring, random_ring
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
-from repro.core.parallel import parallel_ring
+from repro import overlay
+from repro.core.construction import nearest_ring, random_ring
 from repro.core.selection import (clustering_ratio, measure_latency_stats,
                                   select_ring_kind)
 from repro.core.topology import make_latency
@@ -23,39 +23,39 @@ def main():
 
     print(f"== DGRO quickstart: {n} nodes, FABRIC latencies, K={k} rings ==")
 
-    d_rand = diameter_scipy(adjacency_from_rings(
-        w, [random_ring(rng, n) for _ in range(k)]))
-    d_near = diameter_scipy(adjacency_from_rings(
-        w, [nearest_ring(w, 0) for _ in range(1)]
-        + [random_ring(rng, n) for _ in range(k - 1)]))
-    print(f"random K-ring diameter          : {d_rand:7.1f} ms")
-    print(f"nearest+random K-ring diameter  : {d_near:7.1f} ms")
+    ov_rand = overlay.build("random", w, overlay.RandomRingsConfig(k=k),
+                            rng=rng)
+    ov_near = overlay.Overlay.from_rings(
+        w, [nearest_ring(w, 0)] + [random_ring(rng, n) for _ in range(k - 1)])
+    print(f"random K-ring diameter          : {ov_rand.diameter():7.1f} ms")
+    print(f"nearest+random K-ring diameter  : {ov_near.diameter():7.1f} ms")
 
     # --- Algorithm 3: gossip latency measurement + rho selection (§V) ---
-    probe = adjacency_from_rings(w, k_rings(w, k, "random", rng))
-    stats = measure_latency_stats(w, probe, seed=0)
+    stats = measure_latency_stats(w, ov_rand.adjacency, seed=0)
     rho = clustering_ratio(stats)
     kind = select_ring_kind(rho)
     print(f"measured: L_local={stats.l_local:.1f} L_global={stats.l_global:.1f} "
           f"L_min={stats.l_min:.1f} -> rho={rho:.2f} -> add {kind!r} ring")
 
-    best_d, best_m = np.inf, None
-    for m in range(k + 1):
-        d = diameter_scipy(adjacency_from_rings(
-            w, k_rings(w, k, f"mixed:{m}", rng)))
-        if d < best_d:
-            best_d, best_m = d, m
-    print(f"DGRO adaptive ({best_m} random + {k - best_m} nearest rings) : "
-          f"{best_d:7.1f} ms "
-          f"({(1 - best_d / d_rand) * 100:.0f}% better than random)")
+    ov_dgro = overlay.build("dgro", w, overlay.DGROConfig(k=k), rng=rng)
+    print(f"DGRO adaptive ({ov_dgro.num_rings} rho-selected rings)      : "
+          f"{ov_dgro.diameter():7.1f} ms "
+          f"({(1 - ov_dgro.diameter() / ov_rand.diameter()) * 100:.0f}% "
+          f"better than random)")
 
     # --- Algorithm 4: parallel construction ---
     print("\nparallel construction (Alg. 4):")
     for m in (1, 4, 16):
-        perm = parallel_ring(w, m, seed=0)
-        d = diameter_scipy(adjacency_from_rings(w, [perm]))
-        print(f"  {m:3d} partitions -> single-ring diameter {d:7.1f} ms "
-              f"({n // m} sequential steps)")
+        ov_p = overlay.build("parallel", w, overlay.ParallelConfig(m=m),
+                             seed=0)
+        print(f"  {m:3d} partitions -> single-ring diameter "
+              f"{ov_p.diameter():7.1f} ms ({n // m} sequential steps)")
+
+    # overlays snapshot/restore as JSON (benchmark artifacts, trace replays)
+    restored = overlay.Overlay.from_json(ov_dgro.to_json())
+    assert restored.equals(ov_dgro)
+    print(f"\noverlay JSON round-trip OK ({len(ov_dgro.to_json())} bytes, "
+          f"policy={restored.policy!r}, degree stats {restored.degree_stats()})")
 
 
 if __name__ == "__main__":

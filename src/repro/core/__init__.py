@@ -11,7 +11,12 @@ Submodules:
   selection     — Algorithm 3 gossip latency measurement + rho ring selection
   parallel      — Algorithm 4 partitioned construction (host + shard_map)
   ga            — genetic-algorithm and random-search baselines (§VII-A.2)
-  protocols     — Chord / RAPID / Perigee baseline overlays (§V-A)
+  protocols     — DEPRECATED tuple facade; the Chord / RAPID / Perigee
+                  builders live in ``repro.overlay`` (§V-A)
+
+Overlay construction and manipulation lives in ``repro.overlay`` (immutable
+``Overlay`` pytree + builder registry); this package holds the algorithms
+the builders are made of.
 """
 from . import (batcheval, construction, diameter, ga, protocols, selection,  # noqa: F401
                topology)

@@ -44,6 +44,14 @@ class EvolveResult:
     generations: int
     history: List[float]        # best-so-far diameter after each generation
 
+    def to_overlay(self, w: np.ndarray):
+        """The winning genome as a :class:`repro.overlay.Overlay` (the GA's
+        final fitness pre-populates the diameter cache)."""
+        from repro.overlay import Overlay
+
+        return Overlay.from_rings(
+            w, self.best, policy="ga").cache_diameter(self.best_diameter)
+
 
 def _ox1(rng: np.random.Generator, a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Order crossover: copy a slice of parent a, fill the rest in b's order."""

@@ -30,7 +30,8 @@ from .construction import nearest_ring, nearest_ring_jax
 from .diameter import adjacency_from_rings
 
 __all__ = ["partition_nodes", "parallel_ring", "parallel_ring_scored",
-           "score_partition_blocks", "parallel_ring_shmap"]
+           "parallel_overlay", "score_partition_blocks",
+           "parallel_ring_shmap"]
 
 
 def partition_nodes(n: int, m: int, rng: np.random.Generator) -> List[np.ndarray]:
@@ -84,6 +85,21 @@ def parallel_ring_scored(
         segments.append(nodes[local])
     scores = score_partition_blocks(w, segments) if score_blocks else None
     return np.concatenate(segments), scores
+
+
+def parallel_overlay(w: np.ndarray, m: int, seed: int = 0,
+                     score_blocks: bool = False):
+    """Algorithm 4 as an :class:`repro.overlay.Overlay`.
+
+    Returns ``(overlay, block_scores)`` where the overlay holds the merged
+    ring and ``block_scores`` the per-partition ring diameters (``None``
+    unless ``score_blocks``).
+    """
+    from repro.overlay import Overlay
+
+    perm, scores = parallel_ring_scored(w, m, seed=seed,
+                                        score_blocks=score_blocks)
+    return Overlay.from_rings(w, [perm], policy="parallel"), scores
 
 
 def parallel_ring_shmap(w: np.ndarray, mesh: Mesh, axis: str = "partitions",

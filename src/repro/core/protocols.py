@@ -1,53 +1,62 @@
-"""Baseline P2P overlay topologies the paper compares against (§V-A, §VII).
+"""DEPRECATED tuple facade over ``repro.overlay`` (§V-A baselines).
 
-* Chord   — identifier ring from a consistent hash (random permutation) plus
-            finger edges to the 2^j-th successor (Stoica et al. 2001).
-* RAPID   — K random rings from K consistent hash functions (Suresh et al.
-            2018); expander-like but latency-oblivious.
-* Perigee — latency-aware neighbour selection (Mao et al. 2020): each node
-            keeps its d lowest-latency neighbours.  The paper always combines
-            Perigee with a ring "otherwise no connectivity guarantee".
+The Chord / RAPID / Perigee builders used to live here and return raw
+``(adjacency, rings)`` tuples.  They are now registered builders in
+:mod:`repro.overlay` (``overlay.build("chord", w, rng=rng)`` etc.); the
+functions below are thin shims that unwrap an :class:`~repro.overlay.Overlay`
+for call sites that still expect tuples.  Each shim emits a
+``DeprecationWarning`` exactly once per process.
 
-Each builder returns ``(adjacency, rings)`` where ``adjacency`` is the
-weighted overlay (INF on non-edges) and ``rings`` the list of ring
-permutations it embeds (the part DGRO's selection is allowed to swap).
+New code should use::
+
+    from repro import overlay
+    ov = overlay.build("perigee", w, overlay.PerigeeConfig(ring="nearest"),
+                       rng=rng)
+    ov.adjacency, ov.rings        # what the tuple used to carry
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import warnings
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .construction import default_num_rings, nearest_ring, random_ring
-from .diameter import (adjacency_from_edges, adjacency_from_rings, is_edge,
-                       ring_edges)
+from .diameter import is_edge, ring_edges
 
 __all__ = ["chord", "rapid", "perigee", "node_degrees", "with_replaced_rings"]
 
-Overlay = Tuple[np.ndarray, List[np.ndarray]]
+_WARNED: set = set()
 
 
-def chord(w: np.ndarray, rng: np.random.Generator) -> Overlay:
-    """Chord: hash-ordered ring + fingers at power-of-two offsets."""
-    n = w.shape[0]
-    perm = random_ring(rng, n)  # identifier-space order
-    edges = list(ring_edges(perm))
-    # finger j of the node at ring position i points 2^j positions ahead
-    j = 1
-    while (1 << j) < n:
-        off = 1 << j
-        for i in range(n):
-            edges.append((perm[i], perm[(i + off) % n]))
-        j += 1
-    return adjacency_from_edges(w, edges), [perm]
+def _warn_legacy(name: str, replacement: str) -> None:
+    """One DeprecationWarning per legacy shim per process (shared by the
+    tuple facades here and in selection / qlearning)."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} "
+        f"(the repro.overlay API replaces (adjacency, rings) tuples)",
+        DeprecationWarning, stacklevel=3)
 
 
-def rapid(w: np.ndarray, rng: np.random.Generator, k: int | None = None) -> Overlay:
-    """RAPID: K independent consistent-hash (random) rings."""
-    n = w.shape[0]
-    k = k or default_num_rings(n)
-    rings = [random_ring(rng, n) for _ in range(k)]
-    return adjacency_from_rings(w, rings), rings
+def chord(w: np.ndarray, rng: np.random.Generator
+          ) -> Tuple[np.ndarray, List]:
+    """Deprecated: ``overlay.build("chord", w, rng=rng)``."""
+    _warn_legacy("repro.core.protocols.chord",
+                 'overlay.build("chord", w, rng=rng)')
+    from repro import overlay
+    return overlay.build("chord", w, rng=rng).to_tuple()
+
+
+def rapid(w: np.ndarray, rng: np.random.Generator, k: int | None = None
+          ) -> Tuple[np.ndarray, List]:
+    """Deprecated: ``overlay.build("rapid", w, overlay.RapidConfig(k=k), ...)``."""
+    _warn_legacy("repro.core.protocols.rapid",
+                 'overlay.build("rapid", w, k=k, rng=rng)')
+    from repro import overlay
+    return overlay.build("rapid", w, overlay.RapidConfig(k=k),
+                         rng=rng).to_tuple()
 
 
 def perigee(
@@ -55,27 +64,14 @@ def perigee(
     rng: np.random.Generator,
     degree: int | None = None,
     ring_kind: str = "random",
-) -> Overlay:
-    """Perigee: per-node d nearest (lowest-latency) neighbours + one ring.
-
-    ``ring_kind`` in {"random", "nearest"} selects the connectivity ring —
-    the knob DGRO's §V selection turns (Figs. 7/11/15).
-    """
-    n = w.shape[0]
-    degree = degree or default_num_rings(n)
-    edges = []
-    for u in range(n):
-        order = np.argsort(w[u])
-        nearest = [v for v in order if v != u][:degree]
-        edges.extend((u, v) for v in nearest)
-    if ring_kind == "random":
-        ring = random_ring(rng, n)
-    elif ring_kind == "nearest":
-        ring = nearest_ring(w, start=int(rng.integers(n)))
-    else:
-        raise ValueError(ring_kind)
-    edges.extend(ring_edges(ring))
-    return adjacency_from_edges(w, edges), [ring]
+) -> Tuple[np.ndarray, List]:
+    """Deprecated: ``overlay.build("perigee", w, overlay.PerigeeConfig(...))``."""
+    _warn_legacy("repro.core.protocols.perigee",
+                 'overlay.build("perigee", w, degree=d, ring=kind, rng=rng)')
+    from repro import overlay
+    return overlay.build(
+        "perigee", w, overlay.PerigeeConfig(degree=degree, ring=ring_kind),
+        rng=rng).to_tuple()
 
 
 def node_degrees(adj: np.ndarray) -> np.ndarray:
@@ -86,14 +82,23 @@ def node_degrees(adj: np.ndarray) -> np.ndarray:
 def with_replaced_rings(
     w: np.ndarray,
     base_edges_adj: np.ndarray,
-    old_rings: List[np.ndarray],
-    new_rings: List[np.ndarray],
+    old_rings: Sequence[np.ndarray],
+    new_rings: Sequence[np.ndarray],
 ) -> np.ndarray:
-    """Rebuild an overlay with some rings swapped (DGRO ring selection).
+    """Deprecated: :meth:`repro.overlay.Overlay.replace_rings`.
 
-    ``base_edges_adj`` must be the overlay *without* the old rings; callers
-    that only have the full overlay should rebuild from scratch instead.
+    Rebuild an overlay with its rings swapped.  ``base_edges_adj`` must be
+    the overlay *without* the old rings; callers that only have the full
+    overlay should rebuild from scratch instead.  The replacement set must
+    match the old ring count — a silently changed count would alter the
+    per-node degree budget.
     """
+    _warn_legacy("repro.core.protocols.with_replaced_rings",
+                 "Overlay.replace_rings(new_rings)")
+    if len(new_rings) != len(old_rings):
+        raise ValueError(
+            f"replacement ring count {len(new_rings)} != current "
+            f"{len(old_rings)}; rebuild the overlay to change the ring count")
     d = np.array(base_edges_adj, copy=True)
     for ring in new_rings:
         for u, v in ring_edges(ring):

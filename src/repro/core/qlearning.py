@@ -31,7 +31,7 @@ from .embedding import QParams, init_qparams, q_values
 from .topology import make_latency
 
 __all__ = ["DQNConfig", "ReplayBuffer", "train_dqn", "construct_ring_dqn",
-           "dgro_topology", "TrainLog"]
+           "dgro_overlay", "dgro_topology", "TrainLog"]
 
 
 @dataclasses.dataclass
@@ -238,13 +238,29 @@ def construct_ring_dqn(params: QParams, cfg: DQNConfig, w: np.ndarray,
     return perms, d
 
 
-def dgro_topology(params: QParams, cfg: DQNConfig, w: np.ndarray,
-                  n_starts: int = 10, seed: int = 0) -> Tuple[List[np.ndarray], float]:
-    """Paper §VII-B.2: build n_starts K-ring topologies, keep the best."""
+def dgro_overlay(params: QParams, cfg: DQNConfig, w: np.ndarray,
+                 n_starts: int = 10, seed: int = 0):
+    """Paper §VII-B.2: build n_starts K-ring topologies with the trained Q,
+    keep the best — as a :class:`repro.overlay.Overlay` (policy
+    ``"dgro-dqn"``; the winning episode's diameter seeds the cache)."""
+    from repro.overlay import Overlay
+
     best_perms, best_d = None, float("inf")
     for s in range(n_starts):
         rng = np.random.default_rng(seed + s)
         perms, d = construct_ring_dqn(params, cfg, w, rng)
         if d < best_d:
             best_perms, best_d = perms, d
-    return best_perms, best_d
+    return Overlay.from_rings(
+        w, best_perms, policy="dgro-dqn").cache_diameter(best_d)
+
+
+def dgro_topology(params: QParams, cfg: DQNConfig, w: np.ndarray,
+                  n_starts: int = 10, seed: int = 0) -> Tuple[List[np.ndarray], float]:
+    """Deprecated tuple facade over :func:`dgro_overlay`."""
+    from repro.core.protocols import _warn_legacy
+
+    _warn_legacy("repro.core.qlearning.dgro_topology",
+                 "repro.core.qlearning.dgro_overlay(params, cfg, w, ...)")
+    ov = dgro_overlay(params, cfg, w, n_starts=n_starts, seed=seed)
+    return [np.asarray(r) for r in ov.rings], ov.diameter()

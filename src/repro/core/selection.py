@@ -18,7 +18,7 @@ ring.)
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Sequence, Tuple
+from typing import TYPE_CHECKING, Literal, Sequence, Tuple
 
 import numpy as np
 
@@ -26,8 +26,12 @@ from . import batcheval
 from .construction import nearest_ring, random_ring
 from .diameter import neighbour_lists
 
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (overlay -> here)
+    from repro.overlay import Overlay
+
 __all__ = ["LatencyStats", "measure_latency_stats", "clustering_ratio",
-           "select_ring_kind", "score_candidate_rings", "adapt_overlay"]
+           "select_ring_kind", "score_candidate_rings", "adapt",
+           "adapt_overlay"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,26 +121,28 @@ def score_candidate_rings(w: np.ndarray, adj: np.ndarray,
     return batcheval.diameters(overlays)
 
 
-def adapt_overlay(
-    w: np.ndarray,
-    adj: np.ndarray,
+def adapt(
+    overlay: "Overlay",
     eps: float = 0.3,
     seed: int = 0,
     n_candidates: int = 4,
-) -> Tuple[np.ndarray, RingKind, float]:
+) -> Tuple["Overlay", RingKind, float]:
     """One DGRO adaptation step: measure -> classify -> add the chosen ring.
 
     ``n_candidates`` rings of the selected kind (random permutations, or
     nearest rings from distinct start nodes) are generated and ALL their
     augmented overlays are scored in one batched diameter call; the best
-    candidate wins.  Returns (new adjacency, ring kind added, rho).
+    candidate is added via :meth:`Overlay.add_ring`.  Returns
+    (new overlay, ring kind added, rho); ``kind == "keep"`` returns the
+    input overlay unchanged.
     """
+    w, adj = overlay.w, overlay.adjacency
     n = w.shape[0]
     stats = measure_latency_stats(w, adj, seed=seed)
     rho = clustering_ratio(stats)
     kind = select_ring_kind(rho, eps)
     if kind == "keep":
-        return adj, kind, rho
+        return overlay, kind, rho
     rng = np.random.default_rng(seed)
     if kind == "random":
         rings = [random_ring(rng, n) for _ in range(n_candidates)]
@@ -145,5 +151,29 @@ def adapt_overlay(
         rings = [nearest_ring(w, start=int(s)) for s in starts]
     scores = score_candidate_rings(w, adj, rings)
     best = np.stack(rings)[int(np.argmin(scores))]
-    overlay = batcheval.overlay_with_rings(adj, w, best[None, None, :])[0]
-    return overlay, kind, rho
+    return overlay.add_ring(best), kind, rho
+
+
+def adapt_overlay(
+    w: np.ndarray,
+    adj: np.ndarray,
+    eps: float = 0.3,
+    seed: int = 0,
+    n_candidates: int = 4,
+) -> Tuple[np.ndarray, RingKind, float]:
+    """Deprecated adjacency-level facade over :func:`adapt`.
+
+    Wraps ``(w, adj)`` in an :class:`~repro.overlay.Overlay` and unwraps the
+    adapted adjacency, for call sites that predate the Overlay type.  The
+    legacy tolerance for adjacencies whose edge weights deviate from ``w``
+    is kept by folding those weights into the effective latency matrix.
+    """
+    from repro.core.protocols import _warn_legacy
+    from repro.overlay import Overlay
+
+    _warn_legacy("repro.core.selection.adapt_overlay",
+                 "repro.core.selection.adapt(overlay, ...)")
+    new_ov, kind, rho = adapt(
+        Overlay.from_adjacency(w, adj, fold_weights=True), eps=eps,
+        seed=seed, n_candidates=n_candidates)
+    return new_ov.adjacency, kind, rho

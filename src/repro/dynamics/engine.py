@@ -5,6 +5,13 @@ Fail / LatencyDrift / Straggler events — see ``dynamics.scenarios``) against
 an overlay maintained by an :class:`OverlayPolicy` (DGRO, Chord, RAPID or
 Perigee rules) on top of :class:`~repro.dynamics.incremental.IncrementalDistances`.
 
+Policies are thin adapters over the ``repro.overlay`` builder registry:
+initial construction resolves through ``overlay.build(policy.builder, ...)``
+(so the Chord / RAPID / Perigee construction rules live in exactly one
+place), and only the *dynamic* rules — ring splices, stitch repairs,
+join-time fingers / nearest-neighbour edges (via the registry's shared edge
+helpers), and DGRO's periodic ``selection.adapt`` self-repair — live here.
+
 Membership-plane wiring (the paper's application layer):
 
 * **Fail -> Leave**: a crash is not actionable until SWIM detects and
@@ -17,8 +24,8 @@ Membership-plane wiring (the paper's application layer):
   ``repro.membership.elastic.detect_stragglers`` (treated as Leave for the
   overlay, exactly like the elastic layer's mesh rule).
 * **DGRO self-repair**: after every ``adapt_every`` confirmed membership
-  changes the DGRO policy runs ``repro.core.selection.adapt_overlay`` over
-  the live fleet; the winning ring's edges are applied as incremental
+  changes the DGRO policy runs ``repro.core.selection.adapt`` over the live
+  fleet's overlay; the winning ring's edges are applied as incremental
   relaxations, so the distance matrix never needs a from-scratch rebuild
   for repair.
 
@@ -29,13 +36,14 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro import overlay as overlay_api
 from repro.core import selection
-from repro.core.construction import default_num_rings, nearest_ring
-from repro.core.diameter import adjacency_from_edges, is_edge, ring_edges
+from repro.core.construction import default_num_rings
+from repro.core.diameter import adjacency_from_edges, is_edge
 from repro.membership.elastic import HostState, detect_stragglers
 from repro.membership.gossip import SwimConfig, confirmed_leave_time
 
@@ -121,6 +129,12 @@ class OverlayPolicy:
 class RingOverlayPolicy(OverlayPolicy):
     """Union-of-K-rings overlays with splice joins and stitch repairs.
 
+    Construction is NOT implemented here: ``build()`` resolves ``builder``
+    through the ``repro.overlay`` registry over the live sub-fleet's latency
+    block and adopts the resulting :class:`~repro.overlay.Overlay`'s rings
+    (re-indexed to global slot ids) and edge set.  The built overlay is kept
+    on ``initial_overlay`` so traces can snapshot it (``to_json``).
+
     ``rings`` holds cyclic node-id lists.  A join splices the new node into
     each ring next to a chosen anchor ("random" position, or the "nearest"
     live ring member by latency); the anchor's old successor edge is kept —
@@ -130,35 +144,25 @@ class RingOverlayPolicy(OverlayPolicy):
     """
 
     name = "rings"
-    ring_kinds: Sequence[str] = ("random", "random")
+    builder = "rapid"                # registry name resolved by build()
     splice = "random"
 
     def __init__(self, k_rings: int | None = None):
         self.k_rings = k_rings
         self.rings: List[List[int]] = []
+        self.initial_overlay = None
 
-    def _make_ring(self, kind: str, w: np.ndarray, live: np.ndarray,
-                   rng: np.random.Generator) -> List[int]:
-        if kind == "random":
-            return [int(x) for x in rng.permutation(live)]
-        assert kind == "nearest", kind
-        sub = w[np.ix_(live, live)]
-        perm = nearest_ring(sub, start=int(rng.integers(len(live))))
-        return [int(live[i]) for i in perm]
-
-    @staticmethod
-    def _ring_edges(ring: Sequence[int]) -> List[Edge]:
-        return [(int(u), int(v)) for u, v in ring_edges(np.asarray(ring))]
-
-    def _kinds(self, n: int) -> Sequence[str]:
-        k = self.k_rings or default_num_rings(n)
-        kinds = list(self.ring_kinds)
-        return [kinds[i % len(kinds)] for i in range(k)]
+    def _build_config(self, n: int):
+        """Registry config for a fresh build over ``n`` live nodes."""
+        return overlay_api.RapidConfig(k=self.k_rings)
 
     def build(self, w, live, rng) -> List[Edge]:
-        self.rings = [self._make_ring(kind, w, live, rng)
-                      for kind in self._kinds(len(live))]
-        return [e for ring in self.rings for e in self._ring_edges(ring)]
+        live = np.asarray(live)
+        ov = overlay_api.build(self.builder, w[np.ix_(live, live)],
+                               self._build_config(len(live)), rng=rng)
+        self.initial_overlay = ov
+        self.rings = [[int(live[i]) for i in ring] for ring in ov.rings]
+        return [(int(live[a]), int(live[b])) for a, b in ov.edge_list()]
 
     def _splice(self, ring: List[int], w, rng, u: int) -> List[Edge]:
         if not ring:                 # fleet fully drained: joiner re-seeds it
@@ -190,11 +194,12 @@ class RingOverlayPolicy(OverlayPolicy):
 
 
 class DGROPolicy(RingOverlayPolicy):
-    """DGRO: nearest + random rings, latency-aware splices, and periodic
-    Algorithm-3 ring-selection repair applied as incremental relaxations."""
+    """DGRO: rho-adaptive ring construction (the registry's ``"dgro"``
+    builder), latency-aware splices, and periodic Algorithm-3 ring-selection
+    repair applied as incremental relaxations."""
 
     name = "dgro"
-    ring_kinds = ("nearest", "random")
+    builder = "dgro"
     splice = "nearest"
     demotes_stragglers = True
 
@@ -203,6 +208,9 @@ class DGROPolicy(RingOverlayPolicy):
         self.adapt_every = adapt_every
         self._changes_since_adapt = 0
         self.adaptations = 0
+
+    def _build_config(self, n: int):
+        return overlay_api.DGROConfig(k=self.k_rings)
 
     def build(self, w, live, rng) -> List[Edge]:
         # reset adaptation state so a policy instance reused across engines
@@ -222,52 +230,44 @@ class DGROPolicy(RingOverlayPolicy):
         wl = engine.w[np.ix_(live, live)]
         adjl = engine.inc.adj[np.ix_(live, live)]
         seed = int(engine.rng.integers(2**31))
-        new_adj, kind, _rho = selection.adapt_overlay(wl, adjl, seed=seed)
+        # fold_weights: the engine keeps adj == w at edges, but external
+        # drivers may have added custom-weight links via inc.add_edge
+        live_ov = overlay_api.Overlay.from_adjacency(wl, adjl, policy="dgro",
+                                                     fold_weights=True)
+        new_ov, kind, _rho = selection.adapt(live_ov, seed=seed)
         if kind == "keep":
             return
         self.adaptations += 1
-        added = np.argwhere(np.triu(new_adj < adjl, 1))
+        added = np.argwhere(np.triu(new_ov.adjacency < adjl, 1))
         for i, j in added:
             engine.inc.add_edge(int(live[i]), int(live[j]),
-                                float(new_adj[i, j]))
+                                float(new_ov.adjacency[i, j]))
 
 
 class ChordPolicy(RingOverlayPolicy):
     """Chord: one identifier-space ring plus power-of-two finger edges.
 
     Joins splice at a random identifier position and add the joiner's own
-    fingers; other nodes' fingers are repaired lazily (dead targets vanish
-    with the tombstone), which is how Chord's periodic fixups behave between
-    stabilization rounds.
+    fingers (``overlay.chord_finger_edges`` — the same rule the registry
+    builder uses); other nodes' fingers are repaired lazily (dead targets
+    vanish with the tombstone), which is how Chord's periodic fixups behave
+    between stabilization rounds.
     """
 
     name = "chord"
-    ring_kinds = ("random",)
+    builder = "chord"
     splice = "random"
 
     def __init__(self):
         super().__init__(k_rings=1)
 
-    def _fingers(self, u: int) -> List[Edge]:
-        ring = self.rings[0]
-        n = len(ring)
-        pos = ring.index(u)
-        edges = []
-        j = 1
-        while (1 << j) < n:
-            edges.append((u, ring[(pos + (1 << j)) % n]))
-            j += 1
-        return edges
-
-    def build(self, w, live, rng) -> List[Edge]:
-        edges = super().build(w, live, rng)
-        for u in self.rings[0]:
-            edges.extend(self._fingers(u))
-        return edges
+    def _build_config(self, n: int):
+        return overlay_api.ChordConfig()
 
     def attach(self, w, live, rng, u) -> List[Edge]:
         edges = super().attach(w, live, rng, u)
-        edges.extend(self._fingers(u))
+        ring = self.rings[0]
+        edges.extend(overlay_api.chord_finger_edges(ring, ring.index(u)))
         return edges
 
 
@@ -275,7 +275,7 @@ class RapidPolicy(RingOverlayPolicy):
     """RAPID: K independent consistent-hash (random) rings."""
 
     name = "rapid"
-    ring_kinds = ("random",)
+    builder = "rapid"
     splice = "random"
 
     def __init__(self, k_rings: int | None = None):
@@ -283,31 +283,28 @@ class RapidPolicy(RingOverlayPolicy):
 
 
 class PerigeePolicy(RingOverlayPolicy):
-    """Perigee: per-node d lowest-latency neighbours + one connectivity ring."""
+    """Perigee: per-node d lowest-latency neighbours + one connectivity ring.
+
+    Joins add the joiner's nearest-neighbour edges with the registry
+    builder's own rule (``overlay.nearest_neighbour_edges``).
+    """
 
     name = "perigee"
-    ring_kinds = ("random",)
+    builder = "perigee"
     splice = "random"
 
     def __init__(self, degree: int | None = None):
         super().__init__(k_rings=1)
         self.degree = degree
 
-    def _nearest_edges(self, w, live, u: int) -> List[Edge]:
-        d = self.degree or default_num_rings(len(live))
-        others = live[live != u]
-        order = others[np.argsort(w[u, others], kind="stable")]
-        return [(u, int(v)) for v in order[:d]]
-
-    def build(self, w, live, rng) -> List[Edge]:
-        edges = super().build(w, live, rng)
-        for u in live:
-            edges.extend(self._nearest_edges(w, live, int(u)))
-        return edges
+    def _build_config(self, n: int):
+        return overlay_api.PerigeeConfig(degree=self.degree)
 
     def attach(self, w, live, rng, u) -> List[Edge]:
         edges = super().attach(w, live, rng, u)
-        edges.extend(self._nearest_edges(w, live, u))
+        d = self.degree or default_num_rings(len(live))
+        edges.extend(overlay_api.nearest_neighbour_edges(
+            w, np.asarray(live), u, d))
         return edges
 
 
@@ -366,6 +363,14 @@ class ChurnEngine:
 
     def live_ids(self) -> np.ndarray:
         return self.inc.live_ids()
+
+    @property
+    def initial_overlay(self):
+        """The :class:`~repro.overlay.Overlay` the policy built at t=0 over
+        the initial live fleet (local node indexing), or ``None`` for
+        policies that bypass the registry.  ``to_json()`` it next to the
+        trace to snapshot exactly what a replay started from."""
+        return getattr(self.policy, "initial_overlay", None)
 
     def host_states(self) -> List[HostState]:
         """Per-slot membership view for the elastic layer (``plan_rescale``):

@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.construction import nearest_ring, random_ring
+from repro import overlay as overlay_api
 from repro.core.selection import (clustering_ratio, measure_latency_stats,
                                   select_ring_kind)
 
@@ -81,20 +81,22 @@ def plan_rescale(
         raise RuntimeError("no live hosts")
     sub = w[np.ix_(members, members)]
 
-    # paper §V: measure rho on the current (ring) overlay and pick the ring
-    from repro.core.diameter import adjacency_from_rings
+    # paper §V: measure rho on a probe (random-ring) overlay and pick the
+    # ring kind; both rings come from the overlay builder registry
     rng = np.random.default_rng(seed)
-    probe_ring = random_ring(rng, len(members))
-    adj = adjacency_from_rings(sub, [probe_ring])
-    stats = measure_latency_stats(sub, adj, seed=seed)
+    probe = overlay_api.build("random", sub,
+                              overlay_api.RandomRingsConfig(k=1), rng=rng)
+    stats = measure_latency_stats(sub, probe.adjacency, seed=seed)
     rho = clustering_ratio(stats)
     kind = select_ring_kind(rho)
     if kind == "nearest":
-        ring = nearest_ring(sub, start=0)
+        chosen = overlay_api.build(
+            "nearest", sub, overlay_api.NearestRingsConfig(k=1), rng=rng)
+        ring = chosen.rings[0]
     elif kind == "random":
-        ring = probe_ring
+        ring = probe.rings[0]
     else:
-        ring = probe_ring
+        ring = probe.rings[0]
         kind = "keep-random"
     ordered = [members[i] for i in ring]
 

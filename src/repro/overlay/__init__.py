@@ -1,0 +1,50 @@
+"""repro.overlay — the unified overlay API.
+
+Every DGRO workload manipulates the same object: an overlay (latency matrix,
+embedded rings, derived adjacency).  This package is its home — an immutable
+JAX-pytree :class:`Overlay` plus a string-keyed builder registry — replacing
+the ad-hoc ``(adjacency, rings)`` tuples the repo grew up on::
+
+    from repro import overlay
+
+    w = make_latency("fabric", 64, seed=0)
+    ov = overlay.build("dgro", w, seed=0)        # rho-adaptive construction
+    ov.diameter()                                # lazily cached, batcheval
+    ov2 = ov.add_ring(perm)                      # functional updates
+    overlay.Overlay.from_json(ov.to_json())      # snapshot / restore
+
+Registered builders and the paper sections they reproduce:
+
+====================  =====================================================
+builder               paper section
+====================  =====================================================
+``"dgro"``            §V adaptive selection: rho-guided random/nearest ring
+                      mix, best candidate by batched diameter (Alg. 3; the
+                      trained-DQN path is ``core.qlearning.dgro_overlay``,
+                      §IV Algs. 1-2)
+``"chord"``           §II/§V-A baseline: identifier ring + 2^j fingers
+``"rapid"``           §V-A baseline: K consistent-hash rings
+``"perigee"``         §V-A baseline: d nearest neighbours + one ring
+``"ga"``              §VII-A.2 genetic-algorithm K-ring search
+``"nearest"``         §V "shortest ring": greedy nearest-available
+``"random"``          §IV-B random K-ring (the paper's normalizer)
+``"parallel"``        §VI Alg. 4 partitioned construction (M segments)
+====================  =====================================================
+
+New policies register with ``@overlay.register("name", config=Cfg)`` and are
+immediately buildable everywhere (benchmarks, churn engine, examples)
+without touching call sites.
+"""
+from .core import Overlay  # noqa: F401
+from .registry import build, builders, get_builder, register  # noqa: F401
+from .policies import (ChordConfig, DGROConfig, GAConfig,  # noqa: F401
+                       NearestRingsConfig, ParallelConfig, PerigeeConfig,
+                       RandomRingsConfig, RapidConfig, chord_finger_edges,
+                       nearest_neighbour_edges)
+
+__all__ = [
+    "Overlay", "build", "builders", "get_builder", "register",
+    "ChordConfig", "DGROConfig", "GAConfig", "NearestRingsConfig",
+    "ParallelConfig", "PerigeeConfig", "RandomRingsConfig", "RapidConfig",
+    "chord_finger_edges", "nearest_neighbour_edges",
+]

@@ -1,0 +1,314 @@
+"""The :class:`Overlay` type — the repo's core currency.
+
+An overlay is what every DGRO workload manipulates: a weighted latency
+matrix ``w`` over N nodes, the ring permutations embedded in the topology
+(the part ring selection is allowed to swap, paper §V), and any extra
+non-ring edges a protocol adds (Chord fingers, Perigee nearest-neighbour
+links).  The weighted adjacency (0 diagonal, INF sentinel on non-edges) is
+*derived* from ``(w, rings, extra_edges)`` at construction, so an Overlay
+can never hold an adjacency that disagrees with its rings.
+
+Design:
+
+* **immutable** — a frozen dataclass; "mutations" are functional updates
+  (:meth:`replace_rings`, :meth:`add_ring`, :meth:`subset`) that return new
+  instances and share ``w``.
+* **JAX pytree** — registered with ``jax.tree_util``; the array fields
+  (``w``, ``adjacency``, ``extra_edges``, each ring) are leaves and the
+  policy name is static, so Overlays pass through ``tree_map`` / ``jit``
+  boundaries untouched.
+* **lazily cached analytics** — :meth:`distances` (APSP), :meth:`diameter`
+  (largest-CC rule, §IV-C) and degree statistics are computed on first use
+  through :mod:`repro.core.batcheval` and memoized on the instance; the
+  cache is dropped (never copied) by functional updates and pytree
+  round-trips.
+
+Legacy code that wants the old ``(adjacency, rings)`` tuple calls
+:meth:`to_tuple`; :meth:`from_adjacency` wraps an existing adjacency whose
+edge weights come from ``w`` (the invariant every builder in this repo
+maintains).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batcheval
+from repro.core.diameter import (INF, adjacency_from_edges, is_edge,
+                                 largest_cc_diameter, ring_edges)
+
+__all__ = ["Overlay"]
+
+
+def _as_ring_tuple(rings) -> Tuple[np.ndarray, ...]:
+    return tuple(np.asarray(r, dtype=np.intp) for r in rings)
+
+
+def _validate_rings(rings: Tuple[np.ndarray, ...], n: int) -> None:
+    ident = np.arange(n)
+    for i, p in enumerate(rings):
+        if p.shape != (n,) or not np.array_equal(np.sort(p), ident):
+            raise ValueError(
+                f"ring {i} is not a permutation of range({n}): "
+                f"shape {p.shape}, unique {np.unique(p).size}")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Overlay:
+    """Immutable overlay: latency matrix + rings (+ extra edges).
+
+    ``adjacency`` is ALWAYS derived in ``__post_init__`` (it is not an init
+    field, so ``dataclasses.replace`` re-derives it too); only the pytree
+    unflattener bypasses derivation, with leaves that came from a prior
+    instance.
+    """
+
+    w: np.ndarray
+    rings: Tuple[np.ndarray, ...] = ()
+    extra_edges: np.ndarray | None = None
+    policy: str = "custom"
+    adjacency: np.ndarray = dataclasses.field(init=False)
+    _cache: Dict[str, object] = dataclasses.field(
+        default_factory=dict, init=False, repr=False)
+
+    def __post_init__(self):
+        w = np.asarray(self.w, dtype=np.float32)
+        n = w.shape[0]
+        if w.ndim != 2 or w.shape[0] != w.shape[1]:
+            raise ValueError(f"w must be square, got shape {w.shape}")
+        rings = _as_ring_tuple(self.rings)
+        _validate_rings(rings, n)
+        extra = (np.zeros((0, 2), dtype=np.intp) if self.extra_edges is None
+                 else np.asarray(self.extra_edges, dtype=np.intp).reshape(-1, 2))
+        object.__setattr__(self, "w", w)
+        object.__setattr__(self, "rings", rings)
+        object.__setattr__(self, "extra_edges", extra)
+        object.__setattr__(self, "adjacency",
+                           adjacency_from_edges(w, self._all_edges()))
+
+    def _all_edges(self) -> np.ndarray:
+        parts = [ring_edges(p) for p in self.rings] + [self.extra_edges]
+        return np.concatenate(parts, axis=0)
+
+    # -- basic shape ------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        """Number of nodes."""
+        return self.w.shape[0]
+
+    @property
+    def num_rings(self) -> int:
+        return len(self.rings)
+
+    def edge_list(self) -> np.ndarray:
+        """(E, 2) unique undirected edges (u < v) of the overlay."""
+        return np.argwhere(np.triu(np.asarray(is_edge(self.adjacency)), 1))
+
+    # -- lazily cached analytics (via core.batcheval) ---------------------
+
+    def distances(self) -> np.ndarray:
+        """(N, N) all-pairs shortest-path matrix (INF = unreachable)."""
+        if "distances" not in self._cache:
+            d = batcheval.batched_apsp(jnp.asarray(self.adjacency)[None])[0]
+            self._cache["distances"] = np.asarray(d)
+        return self._cache["distances"]
+
+    def diameter(self) -> float:
+        """Weighted diameter of the largest connected component (§IV-C)."""
+        if "diameter" not in self._cache:
+            self._cache["diameter"] = float(
+                largest_cc_diameter(jnp.asarray(self.distances())))
+        return self._cache["diameter"]
+
+    def cache_diameter(self, d: float) -> "Overlay":
+        """Pre-seed the diameter cache and return self.
+
+        The sanctioned entry point for builders (GA, DQN, rho-selection)
+        that already scored this exact topology — saves the second APSP
+        without reaching into the private cache."""
+        self._cache["diameter"] = float(d)
+        return self
+
+    def is_connected(self) -> bool:
+        return bool((self.distances() < float(INF) / 2).all())
+
+    def degrees(self) -> np.ndarray:
+        """Per-node overlay degree."""
+        if "degrees" not in self._cache:
+            self._cache["degrees"] = np.asarray(
+                is_edge(self.adjacency)).sum(axis=1)
+        return self._cache["degrees"]
+
+    def degree_stats(self) -> Dict[str, float]:
+        deg = self.degrees()
+        return {"min": float(deg.min()), "mean": float(deg.mean()),
+                "max": float(deg.max())}
+
+    # -- functional updates -----------------------------------------------
+
+    def replace_rings(self, new_rings: Sequence[np.ndarray]) -> "Overlay":
+        """Swap the ring set (DGRO ring selection); extra edges are kept.
+
+        The replacement must have the SAME ring count — a silently changed
+        count would alter per-node degree budgets (one ring buys one
+        outgoing edge per node, §IV-B).
+        """
+        new_rings = _as_ring_tuple(new_rings)
+        if len(new_rings) != len(self.rings):
+            raise ValueError(
+                f"replacement ring count {len(new_rings)} != current "
+                f"{len(self.rings)}; use add_ring() to grow the ring set")
+        return Overlay(self.w, new_rings, self.extra_edges, self.policy)
+
+    def add_ring(self, perm: np.ndarray) -> "Overlay":
+        """Augment the overlay with one more ring (Alg. 3 repair step)."""
+        return Overlay(self.w, self.rings + (np.asarray(perm, np.intp),),
+                       self.extra_edges, self.policy)
+
+    def subset(self, alive) -> "Overlay":
+        """Restrict to the live nodes (churn): drop dead nodes from every
+        ring (stitching predecessor to successor) and from the extra edges,
+        reindexing to ``range(n_live)``.  Accepts a boolean mask or an index
+        array."""
+        alive = np.asarray(alive)
+        idx = np.flatnonzero(alive) if alive.dtype == bool else np.unique(alive)
+        if idx.size == 0:
+            raise ValueError("subset() needs at least one live node")
+        keep = np.zeros(self.n, dtype=bool)
+        keep[idx] = True
+        remap = np.full(self.n, -1, dtype=np.intp)
+        remap[idx] = np.arange(idx.size)
+        rings = tuple(remap[p[keep[p]]] for p in self.rings)
+        e = self.extra_edges
+        e = e[keep[e[:, 0]] & keep[e[:, 1]]] if e.size else e
+        return Overlay(self.w[np.ix_(idx, idx)], rings,
+                       remap[e] if e.size else None, self.policy)
+
+    # -- conversions ------------------------------------------------------
+
+    def to_tuple(self) -> Tuple[np.ndarray, List]:
+        """Legacy ``(adjacency, rings)`` view (pre-Overlay call sites)."""
+        return self.adjacency, [np.asarray(r) for r in self.rings]
+
+    @classmethod
+    def from_rings(cls, w: np.ndarray, rings: Sequence[np.ndarray],
+                   policy: str = "custom") -> "Overlay":
+        """Union-of-rings overlay (no extra edges)."""
+        return cls(w, _as_ring_tuple(rings), None, policy)
+
+    @classmethod
+    def from_adjacency(cls, w: np.ndarray, adj: np.ndarray,
+                       rings: Sequence[np.ndarray] = (),
+                       policy: str = "custom",
+                       fold_weights: bool = False) -> "Overlay":
+        """Wrap an existing adjacency whose edge weights come from ``w``.
+
+        All edges not covered by ``rings`` are recorded as extra edges; the
+        derived adjacency must reproduce ``adj`` exactly (edge weights equal
+        ``w`` at the edges — the invariant every builder here maintains).
+
+        ``fold_weights=True`` accepts adjacencies with custom edge weights
+        (e.g. ``IncrementalDistances.add_edge(weight=...)`` set a link below
+        its latency): the deviating weights are folded into the stored ``w``
+        so the overlay is representable; off-edge latencies keep ``w``.
+        """
+        adj = np.asarray(adj, dtype=np.float32)
+        if fold_weights:
+            w = np.where(np.asarray(is_edge(adj)), adj,
+                         np.asarray(w, np.float32))
+        rings = _as_ring_tuple(rings)
+        covered = np.zeros(adj.shape, dtype=bool)
+        for p in rings:
+            e = ring_edges(p)
+            covered[e[:, 0], e[:, 1]] = covered[e[:, 1], e[:, 0]] = True
+        extra = np.argwhere(np.triu(np.asarray(is_edge(adj)) & ~covered, 1))
+        ov = cls(w, rings, extra, policy)
+        mask = np.asarray(is_edge(adj))
+        if not (np.allclose(ov.adjacency[mask], adj[mask], rtol=1e-5, atol=1e-5)
+                and np.array_equal(mask, np.asarray(is_edge(ov.adjacency)))):
+            raise ValueError(
+                "adjacency disagrees with w at its edges; Overlay can only "
+                "represent overlays whose edge weights come from w")
+        return ov
+
+    # -- serialization ----------------------------------------------------
+
+    def to_json(self) -> str:
+        """Snapshot (w + rings + extra edges + policy) as JSON.
+
+        ``from_json`` rebuilds the identical Overlay (adjacency re-derived),
+        so churn traces and benchmark artifacts can record the overlay they
+        started from next to the events they replayed.
+        """
+        return json.dumps({
+            "version": 1,
+            "policy": self.policy,
+            "n": self.n,
+            "w": [[float(x) for x in row] for row in self.w],
+            "rings": [[int(x) for x in p] for p in self.rings],
+            "extra_edges": [[int(u), int(v)] for u, v in self.extra_edges],
+        }, indent=None, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Overlay":
+        d = json.loads(s)
+        if d.get("version") != 1:
+            raise ValueError(f"unknown Overlay JSON version {d.get('version')!r}")
+        return cls(np.asarray(d["w"], np.float32),
+                   _as_ring_tuple(d["rings"]),
+                   np.asarray(d["extra_edges"], np.intp).reshape(-1, 2),
+                   d["policy"])
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "Overlay":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- misc -------------------------------------------------------------
+
+    def equals(self, other: "Overlay") -> bool:
+        """Structural equality (arrays compared by value)."""
+        return (self.policy == other.policy
+                and self.num_rings == other.num_rings
+                and np.array_equal(self.w, other.w)
+                and np.array_equal(self.extra_edges, other.extra_edges)
+                and all(np.array_equal(a, b)
+                        for a, b in zip(self.rings, other.rings))
+                and np.array_equal(self.adjacency, other.adjacency))
+
+    def __repr__(self) -> str:  # compact: matrices don't belong in repr
+        return (f"Overlay(policy={self.policy!r}, n={self.n}, "
+                f"rings={self.num_rings}, extra_edges={len(self.extra_edges)})")
+
+
+def _overlay_flatten(ov: Overlay):
+    children = (ov.w, ov.adjacency, ov.extra_edges) + ov.rings
+    return children, (ov.policy, len(ov.rings))
+
+
+def _overlay_unflatten(aux, children) -> Overlay:
+    policy, n_rings = aux
+    w, adjacency, extra_edges, *rings = children
+    ov = object.__new__(Overlay)
+    object.__setattr__(ov, "w", w)
+    object.__setattr__(ov, "adjacency", adjacency)
+    object.__setattr__(ov, "extra_edges", extra_edges)
+    object.__setattr__(ov, "rings", tuple(rings[:n_rings]))
+    object.__setattr__(ov, "policy", policy)
+    object.__setattr__(ov, "_cache", {})
+    return ov
+
+
+jax.tree_util.register_pytree_node(Overlay, _overlay_flatten,
+                                   _overlay_unflatten)

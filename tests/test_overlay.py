@@ -1,0 +1,307 @@
+"""repro.overlay: the Overlay type, the builder registry, the legacy shims."""
+import subprocess
+import sys
+
+from conftest import subproc_env
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import overlay
+from repro.core.diameter import INF, diameter, diameter_scipy, is_edge
+from repro.core.ga import GAConfig
+from repro.core.topology import DISTRIBUTIONS, make_latency
+
+N = 24
+
+# configs that keep every builder cheap enough for a 4-distribution sweep
+FAST_CFG = {
+    "ga": GAConfig(k_rings=2, population=16, budget=64, seed=0),
+    "parallel": overlay.ParallelConfig(m=4, extra_random=1),
+}
+
+
+def _build(name, w, seed=0):
+    return overlay.build(name, w, FAST_CFG.get(name), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_unknown_builder_error_lists_registered_names():
+    w = make_latency("uniform", 8, seed=0)
+    with pytest.raises(ValueError) as exc:
+        overlay.build("does-not-exist", w)
+    msg = str(exc.value)
+    for name in overlay.builders():
+        assert name in msg, (name, msg)
+
+
+def test_expected_builders_registered():
+    assert {"dgro", "chord", "rapid", "perigee", "ga", "nearest", "random",
+            "parallel"} <= set(overlay.builders())
+
+
+@pytest.mark.parametrize("dist", sorted(DISTRIBUTIONS))
+@pytest.mark.parametrize("name", sorted(
+    ["dgro", "chord", "rapid", "perigee", "ga", "nearest", "random",
+     "parallel"]))
+def test_every_builder_connected_and_diameter_matches_fresh(name, dist):
+    """Acceptance: every registered builder x all four latency distributions
+    returns a connected overlay whose (lazily cached) diameter matches a
+    fresh ``core.diameter`` computation on its adjacency."""
+    w = make_latency(dist, N, seed=3)
+    ov = _build(name, w, seed=1)
+    assert ov.policy == name
+    assert ov.n == N and ov.num_rings >= 1
+    assert ov.is_connected(), (name, dist)
+    cached = ov.diameter()
+    fresh = float(diameter(jnp.asarray(ov.adjacency)))
+    assert cached == pytest.approx(fresh, rel=1e-4), (name, dist)
+    # and against the host-side scipy oracle
+    assert cached == pytest.approx(diameter_scipy(ov.adjacency), rel=1e-4)
+
+
+def test_builder_determinism_and_config_overrides():
+    w = make_latency("bitnode", 40, seed=2)
+    a = overlay.build("chord", w, rng=np.random.default_rng(9))
+    b = overlay.build("chord", w, rng=np.random.default_rng(9))
+    assert a.equals(b)
+    c = overlay.build("chord", w, rng=np.random.default_rng(10))
+    assert not np.array_equal(a.adjacency, c.adjacency)
+    # field overrides build the default config
+    ov = overlay.build("rapid", w, k=3, seed=0)
+    assert ov.num_rings == 3
+    with pytest.raises(ValueError):
+        overlay.build("rapid", w, overlay.RapidConfig(k=3), k=3)
+    with pytest.raises(TypeError):
+        overlay.build("rapid", w, overlay.ChordConfig())
+
+
+def test_register_rejects_duplicates_and_accepts_new():
+    with pytest.raises(ValueError):
+        overlay.register("chord")(lambda w, cfg, rng: None)
+
+    @overlay.register("_test_line")
+    def _line(w, cfg, rng):
+        n = w.shape[0]
+        return overlay.Overlay.from_rings(w, [np.arange(n)])
+
+    try:
+        ov = overlay.build("_test_line", make_latency("uniform", 8, seed=0))
+        assert ov.policy == "_test_line" and ov.num_rings == 1
+    finally:
+        overlay.registry._REGISTRY.pop("_test_line")
+
+
+# ---------------------------------------------------------------------------
+# the Overlay type
+# ---------------------------------------------------------------------------
+
+def test_overlay_validates_inputs():
+    w = make_latency("uniform", 8, seed=0)
+    with pytest.raises(ValueError):
+        overlay.Overlay.from_rings(w, [np.arange(7)])       # short ring
+    with pytest.raises(ValueError):
+        overlay.Overlay(w, (), np.array([[0, 9]]))          # edge out of range
+    with pytest.raises(ValueError):
+        overlay.Overlay(np.zeros((3, 4), np.float32))       # non-square w
+
+
+def test_pytree_flatten_unflatten_roundtrip():
+    w = make_latency("fabric", N, seed=0)
+    ov = _build("perigee", w)
+    leaves, treedef = jax.tree_util.tree_flatten(ov)
+    assert all(isinstance(x, np.ndarray) for x in leaves)
+    ov2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(ov2, overlay.Overlay)
+    assert ov.equals(ov2)
+    # identity tree_map round-trips and recomputes the same diameter
+    ov3 = jax.tree_util.tree_map(lambda x: x, ov)
+    assert ov3.diameter() == pytest.approx(ov.diameter())
+    # overlays nest inside other pytrees
+    flat, td = jax.tree_util.tree_flatten({"a": ov, "b": [ov]})
+    rt = jax.tree_util.tree_unflatten(td, flat)
+    assert rt["a"].equals(ov) and rt["b"][0].equals(ov)
+
+
+def test_json_roundtrip_preserves_everything():
+    w = make_latency("bitnode", N, seed=1)
+    for name in ("chord", "dgro"):
+        ov = _build(name, w)
+        rt = overlay.Overlay.from_json(ov.to_json())
+        assert rt.policy == ov.policy
+        assert rt.equals(ov)                   # w, rings, extras, adjacency
+        assert rt.diameter() == pytest.approx(ov.diameter(), rel=1e-5)
+
+
+def test_replace_rings_validates_count_and_swaps():
+    w = make_latency("gaussian", N, seed=4)
+    ov = _build("rapid", w)
+    rng = np.random.default_rng(99)
+    swapped = ov.replace_rings([rng.permutation(N)
+                                for _ in range(ov.num_rings)])
+    assert swapped.num_rings == ov.num_rings
+    assert not np.array_equal(swapped.adjacency, ov.adjacency)
+    with pytest.raises(ValueError):
+        ov.replace_rings([rng.permutation(N)] * (ov.num_rings + 1))
+    with pytest.raises(ValueError):
+        ov.replace_rings([np.arange(N - 1)] * ov.num_rings)  # not a perm
+    # chord keeps its fingers (extra edges) across a ring swap
+    ch = _build("chord", w)
+    sw = ch.replace_rings([rng.permutation(N)])
+    assert len(sw.extra_edges) == len(ch.extra_edges)
+
+
+def test_add_ring_only_improves_diameter():
+    w = make_latency("fabric", N, seed=5)
+    ov = _build("nearest", w)
+    rng = np.random.default_rng(1)
+    grown = ov.add_ring(rng.permutation(N))
+    assert grown.num_rings == ov.num_rings + 1
+    assert grown.diameter() <= ov.diameter() + 1e-6
+    assert ov.num_rings == 1                   # original untouched (immutable)
+
+
+def test_subset_drops_dead_nodes_and_stays_consistent():
+    w = make_latency("uniform", N, seed=6)
+    ov = _build("rapid", w)
+    alive = np.ones(N, bool)
+    alive[[1, 7, 13]] = False
+    sub = ov.subset(alive)
+    assert sub.n == N - 3 and sub.num_rings == ov.num_rings
+    idx = np.flatnonzero(alive)
+    assert np.array_equal(sub.w, w[np.ix_(idx, idx)])
+    assert sub.is_connected()                  # rings re-stitch the survivors
+    # index-array form agrees with the mask form
+    assert sub.equals(ov.subset(idx))
+    with pytest.raises(ValueError):
+        ov.subset(np.zeros(N, bool))
+
+
+def test_dataclasses_replace_rederives_adjacency():
+    """``adjacency`` is a derived (init=False) field: the idiomatic frozen
+    update ``dataclasses.replace(ov, rings=...)`` must re-derive it instead
+    of carrying the old topology along."""
+    import dataclasses
+
+    w = make_latency("uniform", N, seed=3)
+    ov = _build("rapid", w)
+    rng = np.random.default_rng(42)
+    new_rings = tuple(rng.permutation(N) for _ in range(ov.num_rings))
+    rep = dataclasses.replace(ov, rings=new_rings)
+    assert not np.array_equal(rep.adjacency, ov.adjacency)
+    assert rep.equals(ov.replace_rings(new_rings))
+
+
+def test_from_adjacency_with_rings_keeps_rings_swappable():
+    """Edges covered by the passed rings must NOT be recorded as extra
+    edges — otherwise replace_rings silently keeps the old rings' topology."""
+    w = make_latency("gaussian", N, seed=11)
+    base = _build("chord", w)
+    ov = overlay.Overlay.from_adjacency(w, base.adjacency, rings=base.rings)
+    assert np.array_equal(ov.adjacency, base.adjacency)
+    # recovered extras = the finger edges only (as an undirected set; the
+    # builder's raw list may contain duplicate/reversed entries)
+    fingers = {tuple(sorted(e)) for e in base.extra_edges.tolist()}
+    assert {tuple(e) for e in ov.extra_edges.tolist()} == fingers
+    rng = np.random.default_rng(123)
+    swapped = ov.replace_rings([rng.permutation(N)])
+    old_ring_edges = {tuple(sorted(e))
+                      for e in np.stack([base.rings[0],
+                                         np.roll(base.rings[0], -1)], axis=1)}
+    extra_set = {tuple(sorted(e)) for e in swapped.extra_edges.tolist()}
+    assert not (old_ring_edges & extra_set)
+
+
+def test_from_adjacency_roundtrip_and_mismatch_rejected():
+    w = make_latency("gaussian", N, seed=7)
+    ov = _build("perigee", w)
+    rt = overlay.Overlay.from_adjacency(w, ov.adjacency)
+    assert np.array_equal(rt.adjacency, ov.adjacency)
+    bad = ov.adjacency.copy()
+    mask = np.asarray(is_edge(bad))
+    bad[mask] = bad[mask] * 2.0                # weights disagree with w
+    with pytest.raises(ValueError):
+        overlay.Overlay.from_adjacency(w, bad)
+    # fold_weights keeps the legacy tolerance: deviating edge weights are
+    # folded into the stored w and the adjacency reproduces exactly
+    folded = overlay.Overlay.from_adjacency(w, bad, fold_weights=True)
+    assert np.array_equal(folded.adjacency, bad)
+    assert np.array_equal(folded.w[~mask], np.asarray(w)[~mask])
+
+
+def test_adapt_overlay_shim_tolerates_custom_edge_weights():
+    """The legacy adapt_overlay contract accepted adjacencies whose edge
+    weights were set away from w (IncrementalDistances.add_edge(weight=...));
+    the Overlay-backed shim must keep doing so."""
+    import warnings
+
+    from repro.core import selection
+    from repro.core.diameter import adjacency_from_rings
+
+    w = make_latency("uniform", 16, seed=0)
+    adj = adjacency_from_rings(w, [np.random.default_rng(0).permutation(16)])
+    adj[0, 5] = adj[5, 0] = 0.25               # cheaper than w[0, 5]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        new_adj, kind, rho = selection.adapt_overlay(w, adj, seed=0)
+    assert new_adj[0, 5] == np.float32(0.25)   # custom weight survives
+    assert kind in ("nearest", "random", "keep")
+
+
+def test_to_tuple_matches_legacy_layout():
+    w = make_latency("uniform", N, seed=8)
+    ov = _build("chord", w)
+    adj, rings = ov.to_tuple()
+    assert np.array_equal(adj, ov.adjacency)
+    assert len(rings) == ov.num_rings
+    assert float(adj[~np.asarray(is_edge(adj))].max()) == float(INF)
+
+
+def test_degree_stats_and_edge_list():
+    w = make_latency("uniform", N, seed=9)
+    ov = _build("random", w)
+    stats = ov.degree_stats()
+    assert 2 <= stats["min"] <= stats["mean"] <= stats["max"]
+    edges = ov.edge_list()
+    assert (edges[:, 0] < edges[:, 1]).all()
+    assert 2 * len(edges) == int(ov.degrees().sum())
+
+
+# ---------------------------------------------------------------------------
+# legacy shims (satellite: deprecation exactly once)
+# ---------------------------------------------------------------------------
+
+def test_legacy_shims_warn_exactly_once_per_process():
+    """Run the CI checker in a fresh interpreter: each tuple shim emits
+    DeprecationWarning on first use only."""
+    out = subprocess.run(
+        [sys.executable, "tools/check_deprecation.py"], capture_output=True,
+        text=True, env=subproc_env(), cwd=".", timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "all legacy shims warn exactly once" in out.stdout
+
+
+def test_legacy_shims_match_registry_builders():
+    """The tuple facades return exactly what the registry builds."""
+    import warnings
+
+    from repro.core import protocols
+
+    w = make_latency("bitnode", N, seed=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for shim, name, cfg in [
+                (lambda r: protocols.chord(w, r), "chord", None),
+                (lambda r: protocols.rapid(w, r), "rapid", None),
+                (lambda r: protocols.perigee(w, r), "perigee", None)]:
+            adj, rings = shim(np.random.default_rng(5))
+            ov = overlay.build(name, w, cfg, rng=np.random.default_rng(5))
+            assert np.array_equal(adj, ov.adjacency), name
+            assert all(np.array_equal(a, b)
+                       for a, b in zip(rings, ov.rings)), name

@@ -7,10 +7,10 @@ from conftest import subproc_env
 import numpy as np
 import pytest
 
-from repro.core import protocols
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
-from repro.core.ga import GAConfig, ga_search, random_search
-from repro.core.parallel import parallel_ring, partition_nodes
+from repro import overlay
+from repro.core.diameter import diameter_scipy
+from repro.core.ga import GAConfig, evolve, ga_search, random_search
+from repro.core.parallel import parallel_overlay, parallel_ring, partition_nodes
 from repro.core.topology import make_latency
 
 
@@ -27,8 +27,11 @@ def test_parallel_ring_valid_and_reasonable(m):
     w = make_latency("gaussian", 64, seed=3)
     perm = parallel_ring(w, m, seed=0)
     assert sorted(perm) == list(range(64))
-    d = diameter_scipy(adjacency_from_rings(w, [perm]))
-    assert np.isfinite(d) and d > 0
+    ov, _ = parallel_overlay(w, m, seed=0)
+    assert np.array_equal(ov.rings[0], perm)        # same Alg. 4 build
+    d = ov.diameter()
+    assert np.isfinite(d) and 0 < d < 1e8
+    assert d == pytest.approx(diameter_scipy(ov.adjacency), rel=1e-4)
 
 
 def test_parallel_ring_shmap_matches_host():
@@ -45,9 +48,9 @@ mesh = make_mesh((8,), ("partitions",))
 p_host = parallel_ring(w, 8, seed=0)
 p_shm = parallel_ring_shmap(w, mesh, seed=0)
 assert sorted(p_shm) == list(range(64))
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
-dh = diameter_scipy(adjacency_from_rings(w, [p_host]))
-ds = diameter_scipy(adjacency_from_rings(w, [p_shm]))
+from repro.overlay import Overlay
+dh = Overlay.from_rings(w, [p_host]).diameter()
+ds = Overlay.from_rings(w, [p_shm]).diameter()
 assert abs(dh - ds) < 1e-6, (dh, ds)
 print("OK")
 """
@@ -65,30 +68,36 @@ def test_ga_beats_random_same_budget():
     assert d_ga <= d_rs, (d_ga, d_rs)
 
 
+def test_evolve_result_to_overlay():
+    w = make_latency("uniform", 20, seed=5)
+    res = evolve(w, GAConfig(k_rings=2, budget=120, population=20, seed=0))
+    ov = res.to_overlay(w)
+    assert ov.policy == "ga" and ov.num_rings == 2
+    # the seeded diameter cache must agree with an independent oracle over
+    # the rebuilt adjacency (catches wrong rings or stale best_diameter)
+    assert ov.diameter() == pytest.approx(diameter_scipy(ov.adjacency),
+                                          rel=1e-4)
+    assert ov.diameter() == pytest.approx(res.best_diameter, rel=1e-4)
+
+
 @pytest.mark.parametrize("builder", ["chord", "rapid", "perigee"])
 def test_protocol_builders_deterministic(builder):
     """Same latency matrix + same rng seed -> bit-identical overlay."""
     w = make_latency("bitnode", 40, seed=2)
-    build = getattr(protocols, builder)
-    adj1, rings1 = build(w, np.random.default_rng(9))
-    adj2, rings2 = build(w, np.random.default_rng(9))
-    assert np.array_equal(adj1, adj2)
-    assert len(rings1) == len(rings2)
-    assert all(np.array_equal(a, b) for a, b in zip(rings1, rings2))
+    ov1 = overlay.build(builder, w, rng=np.random.default_rng(9))
+    ov2 = overlay.build(builder, w, rng=np.random.default_rng(9))
+    assert ov1.equals(ov2)
     # a different seed produces a different overlay (sanity: rng is used)
-    adj3, _ = build(w, np.random.default_rng(10))
-    assert not np.array_equal(adj1, adj3)
+    ov3 = overlay.build(builder, w, rng=np.random.default_rng(10))
+    assert not np.array_equal(ov1.adjacency, ov3.adjacency)
 
 
 def test_protocol_overlays_connected_and_bounded_degree():
     w = make_latency("uniform", 50, seed=6)
     rng = np.random.default_rng(0)
-    for name, (adj, rings) in {
-        "chord": protocols.chord(w, rng),
-        "rapid": protocols.rapid(w, rng),
-        "perigee": protocols.perigee(w, rng),
-    }.items():
-        d = diameter_scipy(adj)
-        assert np.isfinite(d), name
-        deg = protocols.node_degrees(adj)
+    for name in ("chord", "rapid", "perigee"):
+        ov = overlay.build(name, w, rng=rng)
+        assert ov.is_connected(), name
+        assert np.isfinite(diameter_scipy(ov.adjacency)), name
+        deg = ov.degrees()
         assert deg.max() <= 4 * np.ceil(np.log2(50)) + 4, (name, deg.max())

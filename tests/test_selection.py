@@ -1,10 +1,9 @@
 """Algorithm 3 + rho-based adaptive ring selection (§V)."""
 import numpy as np
-import pytest
 
-from repro.core import protocols
+from repro import overlay
 from repro.core.diameter import diameter_scipy
-from repro.core.selection import (adapt_overlay, clustering_ratio,
+from repro.core.selection import (adapt, clustering_ratio,
                                   measure_latency_stats, select_ring_kind)
 from repro.core.topology import make_latency
 
@@ -14,10 +13,12 @@ def test_chord_rho_high_perigee_rho_low():
     overlay has rho ~ 0."""
     w = make_latency("bitnode", 80, seed=0)
     rng = np.random.default_rng(0)
-    chord_adj, _ = protocols.chord(w, rng)
-    peri_adj, _ = protocols.perigee(w, rng)
-    rho_c = clustering_ratio(measure_latency_stats(w, chord_adj, seed=0))
-    rho_p = clustering_ratio(measure_latency_stats(w, peri_adj, seed=0))
+    chord_ov = overlay.build("chord", w, rng=rng)
+    peri_ov = overlay.build("perigee", w, rng=rng)
+    rho_c = clustering_ratio(
+        measure_latency_stats(w, chord_ov.adjacency, seed=0))
+    rho_p = clustering_ratio(
+        measure_latency_stats(w, peri_ov.adjacency, seed=0))
     assert rho_c > 0.6, rho_c
     assert rho_p < 0.4, rho_p
     assert select_ring_kind(rho_c) == "nearest"
@@ -26,22 +27,22 @@ def test_chord_rho_high_perigee_rho_low():
 
 def test_gossip_aggregation_converges_to_mean():
     w = make_latency("uniform", 40, seed=1)
-    rng = np.random.default_rng(0)
-    adj, _ = protocols.rapid(w, rng)
-    s_few = measure_latency_stats(w, adj, gossip_rounds=60, seed=0)
+    ov = overlay.build("rapid", w, seed=0)
+    s_few = measure_latency_stats(w, ov.adjacency, gossip_rounds=60, seed=0)
     # direct averages (no gossip) as ground truth via many rounds
     assert s_few.l_global > s_few.l_min
     assert s_few.l_local > 0
 
 
-def test_adapt_overlay_improves_chord():
+def test_adapt_improves_chord():
     """Adding the selected ring must not hurt, and usually helps, the
     diameter (paper Figs. 5/11/15)."""
     w = make_latency("fabric", 60, seed=2)
-    rng = np.random.default_rng(0)
-    adj, _ = protocols.chord(w, rng)
-    d0 = diameter_scipy(adj)
-    new_adj, kind, rho = adapt_overlay(w, adj, seed=0)
-    d1 = diameter_scipy(new_adj)
+    ov = overlay.build("chord", w, seed=0)
+    d0 = diameter_scipy(ov.adjacency)
+    new_ov, kind, rho = adapt(ov, seed=0)
+    d1 = diameter_scipy(new_ov.adjacency)
     assert kind in ("nearest", "random", "keep")
     assert d1 <= d0 + 1e-9, (d0, d1)
+    if kind != "keep":       # the winning ring is appended, never in place
+        assert new_ov.num_rings == ov.num_rings + 1
