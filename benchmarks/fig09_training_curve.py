@@ -1,25 +1,105 @@
-"""Paper Fig. 9: DQN training/test curve (diameter vs epoch).
+"""Paper Fig. 9: DQN training/test curve (diameter vs epoch) + rollout gate.
 
-Reduced defaults for CPU (paper: N up to 200, 1e4 epochs); pass --epochs /
---n for the full sweep.  Asserts the paper's qualitative claim: the test
-diameter improves as training progresses and ends below the random ring.
+Two parts:
+
+* **Training curve** — trains the DQN through the device rollout engine
+  (``repro.core.rollout``: one fused ``lax.scan`` device call per epoch)
+  and asserts the paper's qualitative claim: the test diameter improves as
+  training progresses and ends below the random ring.  Reduced defaults
+  for CPU (paper: N up to 200, 1e4 epochs); pass --epochs / --n for the
+  full sweep.
+
+* **Rollout throughput gate** — greedy K-ring construction over
+  ``bench_envs`` graphs of ``bench_n`` nodes, device engine (ONE vmapped
+  scan call) vs the step-by-step host episode loop it replaced (one device
+  round-trip per action + full APSP per reward).  The acceptance gate is
+  >= 10x rollout steps/sec for the device engine at N=32, E=8 on CPU
+  (enforced by ``benchmarks.run`` via ``passes_gate``).
+
+Results land in ``BENCH_fig09_dqn.json`` (uploaded by the CI benchmarks
+job) so the perf trajectory is archived across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from repro import overlay
-from repro.core.qlearning import DQNConfig, train_dqn
+from repro.core import rollout
+from repro.core.embedding import init_qparams
+from repro.core.qlearning import DQNConfig, construct_ring_dqn, train_dqn
 from repro.core.topology import make_latency
 
 
+def _bench_rollout(bench_n: int, bench_envs: int, k_rings: int, seed: int,
+                   dist: str, device_reps: int = 10, trials: int = 3) -> dict:
+    """Rollout steps/sec: fused device engine vs host episode loop.
+
+    Both paths report best-of-``trials`` (min wall time) — the same
+    noise-mitigation fig16 uses; single short timing windows on shared CPU
+    runners are bimodal enough to flip the gate otherwise."""
+    cfg = DQNConfig(n=bench_n, k_rings=k_rings, seed=seed, dist=dist)
+    params = init_qparams(jax.random.PRNGKey(seed), cfg.p, cfg.h)
+    ws = np.stack([make_latency(dist, bench_n, seed=40_000 + i)
+                   for i in range(bench_envs)])
+    steps = bench_envs * k_rings * bench_n
+
+    plan = rollout.make_plan(np.random.default_rng(seed), bench_envs,
+                             k_rings, bench_n)
+    args = (jnp.asarray(ws, jnp.float32), jnp.asarray(plan.starts),
+            jnp.asarray(plan.eps_u), jnp.asarray(plan.choice_u))
+
+    def device_call():
+        return rollout.rollout_episodes(
+            params, *args, 0.0, cfg.alpha, k_rings=k_rings,
+            n_rounds=cfg.n_rounds)[2].block_until_ready()
+
+    t0 = time.perf_counter()
+    device_call()                                   # compile + warm
+    compile_s = time.perf_counter() - t0
+    best_dev = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(device_reps):
+            device_call()
+        best_dev = min(best_dev, time.perf_counter() - t0)
+    device_sps = device_reps * steps / best_dev
+
+    hcfg = dataclasses.replace(cfg, rollout="host")
+    construct_ring_dqn(params, hcfg, ws[0], np.random.default_rng(seed))
+    best_host = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for e in range(bench_envs):
+            construct_ring_dqn(params, hcfg, ws[e],
+                               np.random.default_rng(seed + e))
+        best_host = min(best_host, time.perf_counter() - t0)
+    host_sps = steps / best_host
+
+    return {
+        "n": bench_n, "envs": bench_envs, "k_rings": k_rings,
+        "steps_per_call": steps,
+        "rollout_steps_per_s_device": device_sps,
+        "rollout_steps_per_s_host": host_sps,
+        "speedup": device_sps / host_sps,
+        "device_compile_s": compile_s,
+    }
+
+
 def run(n: int = 14, epochs: int = 120, k_rings: int = 2, seed: int = 0,
-        dist: str = "uniform", eval_graphs: int = 5):
+        dist: str = "uniform", eval_graphs: int = 5, n_envs: int = 1,
+        rollout_mode: str = "device", bench_n: int = 32, bench_envs: int = 8,
+        out_json: str = "BENCH_fig09_dqn.json"):
     cfg = DQNConfig(n=n, k_rings=k_rings, epochs=epochs,
-                    eps_decay=max(epochs // 2, 1), seed=seed, dist=dist)
+                    eps_decay=max(epochs // 2, 1), seed=seed, dist=dist,
+                    rollout=rollout_mode, n_envs=n_envs)
     t0 = time.time()
     params, log = train_dqn(cfg, eval_every=max(epochs // 8, 1),
                             eval_graphs=eval_graphs)
@@ -38,11 +118,36 @@ def run(n: int = 14, epochs: int = 120, k_rings: int = 2, seed: int = 0,
     first, last = log.test_diam[0], log.test_diam[-1]
     best = min(log.test_diam)
     print(f"# random_ring_diam={rand_d:.2f} first={first:.2f} last={last:.2f} "
-          f"best={best:.2f} train_s={train_s:.1f}")
+          f"best={best:.2f} train_s={train_s:.1f} "
+          f"train_steps_per_s={log.steps_per_sec:.0f} [{cfg.rollout}]")
+
+    bench = _bench_rollout(bench_n, bench_envs, k_rings, seed, dist)
+    print(f"# rollout N={bench['n']} E={bench['envs']}: "
+          f"device {bench['rollout_steps_per_s_device']:.0f} steps/s vs "
+          f"host {bench['rollout_steps_per_s_host']:.0f} steps/s "
+          f"-> {bench['speedup']:.1f}x (gate >= 10x)")
+
+    results = {
+        "train": {
+            "n": n, "epochs": epochs, "k_rings": k_rings, "dist": dist,
+            "rollout": cfg.rollout, "n_envs": n_envs,
+            "seconds": log.seconds, "train_steps_per_s": log.steps_per_sec,
+            "test_diam_first": first, "test_diam_last": last,
+            "test_diam_best": best, "random_ring_diam": float(rand_d),
+            "epochs_logged": log.epochs, "test_diam": log.test_diam,
+        },
+        "rollout_gate": bench,
+    }
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
     return {"name": "fig09_training_curve",
             "us_per_call": train_s * 1e6 / max(epochs, 1),
-            "derived": f"test_diam {first:.1f}->best {best:.1f} (random {rand_d:.1f})",
-            "improved": best <= first and best <= rand_d}
+            "derived": f"test_diam {first:.1f}->best {best:.1f} "
+                       f"(random {rand_d:.1f}); rollout "
+                       f"{bench['speedup']:.1f}x device vs host",
+            "improved": best <= first and best <= rand_d,
+            "passes_gate": bench["speedup"] >= 10.0}
 
 
 if __name__ == "__main__":
@@ -51,5 +156,11 @@ if __name__ == "__main__":
     ap.add_argument("--epochs", type=int, default=120)
     ap.add_argument("--k-rings", type=int, default=2)
     ap.add_argument("--dist", default="uniform")
+    ap.add_argument("--n-envs", type=int, default=1)
+    ap.add_argument("--rollout", default="device", choices=["device", "host"])
+    ap.add_argument("--bench-n", type=int, default=32)
+    ap.add_argument("--bench-envs", type=int, default=8)
     args = ap.parse_args()
-    run(args.n, args.epochs, args.k_rings, dist=args.dist)
+    run(args.n, args.epochs, args.k_rings, dist=args.dist,
+        n_envs=args.n_envs, rollout_mode=args.rollout,
+        bench_n=args.bench_n, bench_envs=args.bench_envs)

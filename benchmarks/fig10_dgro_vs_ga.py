@@ -1,8 +1,10 @@
 """Paper Fig. 10: DGRO vs genetic algorithm vs random (diameter + time).
 
 Diameters are normalized by the random-K-ring result (paper's normalization).
-DGRO builds n_starts topologies and keeps the best (paper: 10 starts); the GA
-searches ``--ga-budget`` topologies (paper: 1e5).
+DGRO builds n_starts topologies and keeps the best (paper: 10 starts) — with
+``--rollout device`` (default) all n_starts constructions run as ONE vmapped
+batched rollout call through ``repro.core.rollout``; the GA searches
+``--ga-budget`` topologies (paper: 1e5).
 """
 from __future__ import annotations
 
@@ -18,9 +20,10 @@ from repro.core.topology import make_latency
 
 
 def run(n: int = 14, epochs: int = 50, ga_budget: int = 1000,
-        k_rings: int = 2, n_graphs: int = 3, n_starts: int = 5, seed: int = 0):
+        k_rings: int = 2, n_graphs: int = 3, n_starts: int = 5, seed: int = 0,
+        rollout: str = "device"):
     cfg = DQNConfig(n=n, k_rings=k_rings, epochs=epochs,
-                    eps_decay=max(epochs // 2, 1), seed=seed)
+                    eps_decay=max(epochs // 2, 1), seed=seed, rollout=rollout)
     t0 = time.time()
     params, _ = train_dqn(cfg, eval_every=epochs)
     train_s = time.time() - t0
@@ -49,7 +52,8 @@ def run(n: int = 14, epochs: int = 50, ga_budget: int = 1000,
     t_dgro = float(np.mean([r[2] for r in rows]))
     t_ga = float(np.mean([r[3] for r in rows]))
     print(f"# normalized: dgro={dgro_norm:.3f} ga={ga_norm:.3f} "
-          f"(train {train_s:.0f}s, infer {t_dgro:.1f}s vs ga {t_ga:.1f}s)")
+          f"(train {train_s:.0f}s, infer {t_dgro:.1f}s vs ga {t_ga:.1f}s, "
+          f"rollout={rollout})")
     return {"name": "fig10_dgro_vs_ga",
             "us_per_call": t_dgro * 1e6,
             "derived": f"norm-diam dgro={dgro_norm:.2f} ga={ga_norm:.2f}",
@@ -61,5 +65,6 @@ if __name__ == "__main__":
     ap.add_argument("--n", type=int, default=14)
     ap.add_argument("--epochs", type=int, default=50)
     ap.add_argument("--ga-budget", type=int, default=1000)
+    ap.add_argument("--rollout", default="device", choices=["device", "host"])
     args = ap.parse_args()
-    run(args.n, args.epochs, args.ga_budget)
+    run(args.n, args.epochs, args.ga_budget, rollout=args.rollout)

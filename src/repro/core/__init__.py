@@ -7,7 +7,12 @@ Submodules:
                   device call per candidate batch; chunked for memory)
   construction  — Algorithm 1 ring constructors (random/nearest/greedy/K-ring)
   embedding     — Eqns 2-4 graph embedding + Q-head (structure2vec style)
-  qlearning     — Algorithm 2 DQN with replay (episodes on host, math jit'd)
+  rollout       — device-resident vectorized episode engine: one jit'd
+                  lax.scan per epoch over E vmapped environments, with
+                  incremental-relax rewards, a device replay buffer and
+                  fused TD updates
+  qlearning     — Algorithm 2 DQN facade over the rollout engine
+                  (rollout="device" default; "host" debug loop retained)
   selection     — Algorithm 3 gossip latency measurement + rho ring selection
   parallel      — Algorithm 4 partitioned construction (host + shard_map)
   ga            — genetic-algorithm and random-search baselines (§VII-A.2)

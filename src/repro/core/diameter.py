@@ -34,6 +34,7 @@ __all__ = [
     "adjacency_from_rings",
     "minplus",
     "apsp",
+    "relax_edge_update",
     "largest_cc_diameter",
     "diameter",
     "diameter_of_rings",
@@ -142,6 +143,23 @@ def apsp(adj: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
         return minplus(d, d, use_kernel=use_kernel)
 
     return jax.lax.fori_loop(0, n_iters, body, adj)
+
+
+def relax_edge_update(dist: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
+                      wuv: jnp.ndarray) -> jnp.ndarray:
+    """Exact O(N^2) repair of an APSP matrix after inserting edge (u, v).
+
+    With positive weights a new shortest path crosses the inserted edge at
+    most once, so ``D' = min(D, D[:,u] + w + D[v,:], D[:,v] + w + D[u,:])``
+    is exact.  Shared by the churn engine (``dynamics.incremental``) and the
+    DQN rollout engine (``core.rollout``), which uses it as the in-scan
+    carry update replacing a full O(N^3) APSP per reward.
+    """
+    du = dist[:, u]                       # distances into u
+    dv = dist[:, v]
+    via = jnp.minimum(du[:, None] + wuv + dist[v, :][None, :],
+                      dv[:, None] + wuv + dist[u, :][None, :])
+    return jnp.minimum(dist, via)
 
 
 def largest_cc_diameter(d: jnp.ndarray) -> jnp.ndarray:

@@ -108,6 +108,21 @@ def q_values(
     return hidden @ params.theta10                               # (N,)
 
 
-q_values_batch = jax.jit(
-    jax.vmap(q_values, in_axes=(None, 0, 0, 0)), static_argnames=()
-)
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def q_values_batch(
+    params: QParams,
+    w: jnp.ndarray,
+    adj: jnp.ndarray,
+    v_t: jnp.ndarray,
+    n_rounds: int = 3,
+) -> jnp.ndarray:
+    """Batched :func:`q_values` over (B, N, N) stacks.  Returns (B, N).
+
+    ``n_rounds`` is a static kwarg shared across the batch — the previous
+    ``vmap(..., in_axes=(None, 0, 0, 0))`` formulation had no axis spec for
+    it, so passing ``n_rounds`` broke the call instead of configuring the
+    embedding depth.
+    """
+    return jax.vmap(
+        lambda w1, adj1, v1: q_values(params, w1, adj1, v1, n_rounds)
+    )(w, adj, v_t)

@@ -8,26 +8,40 @@ MDP (paper §IV-C):
     -D(G_T) plus the latency-shaping term.
 
 Replay + epsilon-greedy exactly per Algorithm 2; epsilon schedule per
-§VII-B.1: eps = max(1 - epoch/eps_decay, 0.05).  Host drives the (cheap,
-control-flow-heavy) episode loop; the Q forward, TD update and diameter are
-jit'd JAX.
+§VII-B.1: eps = max(1 - epoch/eps_decay, 0.05).
+
+This module is a thin facade over :mod:`repro.core.rollout`, the
+device-resident vectorized episode engine: with ``cfg.rollout="device"``
+(the default) an entire epoch — eps-greedy actions over ``cfg.n_envs``
+parallel graphs, incremental O(N^2) relax rewards, replay pushes and TD
+updates — runs as ONE jit'd ``lax.scan`` (one device call per epoch).
+``cfg.rollout="host"`` keeps the original step-by-step host loop as a
+debug path; both consume the same pre-generated :class:`~repro.core.
+rollout.RolloutPlan` randomness, so any episode given the same plan makes
+identical decisions and builds identical rings (cross-validated in
+tests).  Note the caveat for full training runs: the two modes consume
+the shared epoch rng differently at eval points (the device path draws
+one batched eval plan, the host path one plan per eval graph), so
+train_dqn trajectories diverge after the first eval even at
+``n_envs=1`` — episode-level parity is the debugging contract.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
-from .construction import default_num_rings
-from .diameter import INF, diameter
+from repro.train.optimizer import adamw_init
+from . import rollout
+from .diameter import INF, largest_cc_diameter, relax_edge_update
 from .embedding import QParams, init_qparams, q_values
+from .rollout import RolloutPlan, make_plan
 from .topology import make_latency
 
 __all__ = ["DQNConfig", "ReplayBuffer", "train_dqn", "construct_ring_dqn",
@@ -52,15 +66,27 @@ class DQNConfig:
     dist: str = "uniform"
     seed: int = 0
     updates_per_step: int = 1
+    rollout: str = "device"         # "device" (fused lax.scan) | "host" (debug)
+    n_envs: int = 1                 # parallel environments per device epoch
 
 
 class ReplayBuffer:
-    """Fixed-capacity ring buffer of transitions (Alg. 2 memory M)."""
+    """Fixed-capacity ring buffer of transitions (Alg. 2 memory M).
+
+    Transitions store a graph id (``widx``) into a small table of epoch
+    latency graphs instead of a full (N, N) copy of ``w`` per step — every
+    step of an epoch shares one graph, so the table holds
+    O(capacity / steps-per-epoch) matrices instead of O(capacity).  Dead
+    graphs (no live transition references them) are pruned as the ring
+    buffer overwrites; the device-resident buffer
+    (:class:`repro.core.rollout.DeviceBuffer`) uses the same layout by
+    construction.
+    """
 
     def __init__(self, capacity: int, n: int):
         self.capacity = capacity
         self.n = n
-        self.w = np.zeros((capacity, n, n), np.float32)
+        self.widx = np.zeros((capacity,), np.int64)
         self.adj = np.zeros((capacity, n, n), np.uint8)
         self.v = np.zeros((capacity,), np.int32)
         self.action = np.zeros((capacity,), np.int32)
@@ -69,12 +95,48 @@ class ReplayBuffer:
         self.v_next = np.zeros((capacity,), np.int32)
         self.visited_next = np.zeros((capacity, n), np.uint8)
         self.done = np.zeros((capacity,), np.uint8)
+        self.graphs: Dict[int, np.ndarray] = {}
+        self._next_gid = 0
+        self._last_gid: Optional[int] = None
         self.size = 0
         self.ptr = 0
 
-    def push(self, w, adj, v, action, reward, adj_next, v_next, visited_next, done):
+    @property
+    def n_graphs(self) -> int:
+        return len(self.graphs)
+
+    def register_graph(self, w: np.ndarray) -> int:
+        """Intern ``w`` in the graph table, reusing the last id when the
+        matrix is unchanged (the per-episode common case)."""
+        w = np.asarray(w, np.float32)
+        if (self._last_gid is not None
+                and np.array_equal(self.graphs[self._last_gid], w)):
+            return self._last_gid
+        gid = self._next_gid
+        self._next_gid += 1
+        self.graphs[gid] = w.copy()
+        self._last_gid = gid
+        self._prune()
+        return gid
+
+    def _prune(self) -> None:
+        """Drop graphs no live transition references.  Ids are monotone and
+        the ring buffer overwrites FIFO, so everything below the minimum
+        live id is dead (the latest graph is always kept)."""
+        min_live = (int(self.widx[:self.size].min()) if self.size
+                    else self._next_gid)
+        for g in [g for g in self.graphs
+                  if g < min_live and g != self._last_gid]:
+            del self.graphs[g]
+
+    def push(self, w, adj, v, action, reward, adj_next, v_next, visited_next,
+             done):
+        """``w`` may be a graph id from :meth:`register_graph` or a raw
+        (N, N) matrix (interned on the fly)."""
+        gid = int(w) if isinstance(w, (int, np.integer)) \
+            else self.register_graph(w)
         i = self.ptr
-        self.w[i] = w
+        self.widx[i] = gid
         self.adj[i] = adj
         self.v[i] = v
         self.action[i] = action
@@ -86,45 +148,30 @@ class ReplayBuffer:
         self.ptr = (self.ptr + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
-    def sample(self, rng: np.random.Generator, batch: int):
-        idx = rng.integers(0, self.size, size=batch)
-        return (self.w[idx], self.adj[idx], self.v[idx], self.action[idx],
+    def _gather(self, idx: np.ndarray):
+        w = np.stack([self.graphs[int(g)] for g in self.widx[idx]])
+        return (w, self.adj[idx], self.v[idx], self.action[idx],
                 self.reward[idx], self.adj_next[idx], self.v_next[idx],
                 self.visited_next[idx], self.done[idx])
 
+    def sample(self, rng: np.random.Generator, batch: int):
+        return self._gather(rng.integers(0, self.size, size=batch))
+
+    def sample_at(self, uniforms: np.ndarray):
+        """Sample via pre-generated uniforms — ``floor(u * size)``, the same
+        formula the device scan applies to the same plan, so host and
+        device training draw identical replay batches."""
+        idx = (np.asarray(uniforms, np.float32)
+               * np.float32(self.size)).astype(np.int32)
+        return self._gather(np.minimum(idx, self.size - 1))
+
 
 # ---------------------------------------------------------------------------
-# jit'd TD update
+# jit'd kernels for the host debug path (math shared with the device engine)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_rounds",))
-def _td_update(params: QParams, opt_state, w, adj, v, action, reward,
-               adj_next, v_next, visited_next, done, gamma, lr,
-               n_rounds: int = 3):
-    """One SGD step on the squared TD error over a replay batch."""
-
-    def q_sa(p, w1, a1, v1, act1):
-        return q_values(p, w1, a1.astype(jnp.float32), v1, n_rounds)[act1]
-
-    def target(w1, an1, vn1, vis1, d1, r1):
-        qn = q_values(params, w1, an1.astype(jnp.float32), vn1, n_rounds)
-        qn = jnp.where(vis1.astype(bool), -jnp.inf, qn)
-        best = jnp.max(qn)
-        best = jnp.where(jnp.isfinite(best), best, 0.0)
-        return r1 + gamma * best * (1.0 - d1)
-
-    y = jax.vmap(target)(w, adj_next, v_next, visited_next,
-                         done.astype(jnp.float32), reward)
-    y = jax.lax.stop_gradient(y)
-
-    def loss_fn(p):
-        q = jax.vmap(q_sa, in_axes=(None, 0, 0, 0, 0))(p, w, adj, v, action)
-        return jnp.mean(jnp.square(y - q))
-
-    loss, grads = jax.value_and_grad(loss_fn)(params)
-    cfg = AdamWConfig(lr=lr, b1=0.9, b2=0.999, clip_norm=5.0)
-    new_params, new_state, _ = adamw_update(cfg, grads, opt_state, params)
-    return new_params, new_state, loss
+_td_update = functools.partial(jax.jit, static_argnames=("n_rounds",))(
+    rollout.td_update_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("n_rounds",))
@@ -133,64 +180,84 @@ def _greedy_q(params: QParams, w, adj, v, visited, n_rounds: int = 3):
     return jnp.where(visited, -jnp.inf, q)
 
 
-_diameter_jit = jax.jit(diameter)
+_relax_jit = jax.jit(relax_edge_update)
+_cc_diameter_jit = jax.jit(largest_cc_diameter)
 
 
 # ---------------------------------------------------------------------------
-# episodes
+# host episode loop — rollout="host" debug path, mirrors the device scan
 # ---------------------------------------------------------------------------
 
 def _run_episode(params, cfg: DQNConfig, w: np.ndarray, eps: float,
-                 rng: np.random.Generator, buffer: Optional[ReplayBuffer],
-                 opt_state=None, train: bool = True):
-    """Build k_rings rings with eps-greedy Q; optionally train per step."""
+                 plan: RolloutPlan, env: int = 0,
+                 buffer: Optional[ReplayBuffer] = None, opt_state=None,
+                 train: bool = True, gid: Optional[int] = None):
+    """Build k_rings rings step by step on the host (debug mirror).
+
+    Consumes column ``env`` of ``plan`` with the exact decision formulas of
+    :func:`repro.core.rollout.rollout_episodes` (same eps coin, same
+    ``floor(u * n_unvisited)`` random pick, same incremental-relax reward),
+    so device and host trajectories match at fixed plans.
+    """
     n = cfg.n
-    adj_w = np.full((n, n), float(INF), np.float32)   # weighted partial graph
-    np.fill_diagonal(adj_w, 0.0)
+    dist = np.full((n, n), float(INF), np.float32)
+    np.fill_diagonal(dist, 0.0)
+    dist = jnp.asarray(dist)                          # APSP of partial graph
     adj = np.zeros((n, n), np.uint8)                  # 0/1 adjacency for embed
     prev_d = 0.0                                      # D(G_0) := 0 (empty)
-    losses = []
+    losses: List[float] = []
+    rewards: List[float] = []
     perms: List[np.ndarray] = []
 
     for ring_i in range(cfg.k_rings):
-        start = int(rng.integers(n))
+        start = int(plan.starts[env, ring_i])
         visited = np.zeros(n, np.uint8)
         visited[start] = 1
         perm = [start]
         v = start
         for _t in range(n):  # n-1 inner edges + closing edge
+            t = ring_i * n + _t
             closing = _t == n - 1
             if closing:
                 a = start                              # close the ring
-            elif rng.random() < eps:
-                a = int(rng.choice(np.flatnonzero(visited == 0)))
+            elif np.float32(plan.eps_u[t, env]) < np.float32(eps):
+                unvis = np.flatnonzero(visited == 0)
+                ridx = int(np.float32(plan.choice_u[t, env])
+                           * np.float32(len(unvis)))
+                a = int(unvis[min(ridx, len(unvis) - 1)])
             else:
-                q = np.asarray(_greedy_q(params, w, adj, v, visited.astype(bool),
-                                         cfg.n_rounds))
+                q = np.asarray(_greedy_q(params, w, adj, v,
+                                         visited.astype(bool), cfg.n_rounds))
                 a = int(np.argmax(q))
             adj_prev = adj.copy()
-            adj_w[v, a] = min(adj_w[v, a], w[v, a]); adj_w[a, v] = adj_w[v, a]
             adj[v, a] = 1; adj[a, v] = 1
-            new_d = float(_diameter_jit(jnp.asarray(adj_w)))
-            reward = (prev_d - new_d) - cfg.alpha * float(w[v, a])
+            w_edge = np.float32(w[v, a])
+            dist = _relax_jit(dist, v, a, w_edge)
+            new_d = float(_cc_diameter_jit(dist))
+            reward = float(np.float32(prev_d) - np.float32(new_d)
+                           - np.float32(cfg.alpha) * w_edge)
+            rewards.append(reward)
             done = closing and ring_i == cfg.k_rings - 1
             if buffer is not None and not closing:
                 visited_next = visited.copy(); visited_next[a] = 1
-                buffer.push(w, adj_prev, v, a, reward, adj, a, visited_next, done)
+                buffer.push(w if gid is None else gid, adj_prev, v, a, reward,
+                            adj, a, visited_next, done)
             prev_d = new_d
             if not closing:
                 visited[a] = 1
                 perm.append(a)
                 v = a
             if train and buffer is not None and buffer.size >= cfg.batch_size:
-                for _ in range(cfg.updates_per_step):
-                    batch = buffer.sample(rng, cfg.batch_size)
+                for u_i in range(cfg.updates_per_step):
+                    batch = buffer.sample_at(plan.sample_u[t, u_i])
                     params, opt_state, loss = _td_update(
                         params, opt_state, *[jnp.asarray(x) for x in batch],
-                        jnp.float32(cfg.gamma), jnp.float32(cfg.lr), cfg.n_rounds)
+                        jnp.float32(cfg.gamma), jnp.float32(cfg.lr),
+                        cfg.n_rounds)
                     losses.append(float(loss))
         perms.append(np.asarray(perm))
-    return params, opt_state, prev_d, losses, perms
+    return (params, opt_state, prev_d, losses, perms,
+            np.asarray(rewards, np.float32))
 
 
 @dataclasses.dataclass
@@ -200,59 +267,161 @@ class TrainLog:
     test_diam: List[float]
     loss: List[float]
     seconds: float
+    steps_per_sec: float = 0.0
+
+
+def _plan_arrays(plan: RolloutPlan):
+    return (jnp.asarray(plan.starts), jnp.asarray(plan.eps_u),
+            jnp.asarray(plan.choice_u))
+
+
+def _eval_diameters_device(params, cfg: DQNConfig, test_ws,
+                           rng: np.random.Generator) -> float:
+    """Greedy construction on all eval graphs in ONE batched rollout call."""
+    plan = make_plan(rng, len(test_ws), cfg.k_rings, cfg.n)
+    _, _, d = rollout.rollout_episodes(
+        params, jnp.asarray(np.stack(test_ws), jnp.float32),
+        *_plan_arrays(plan), 0.0, cfg.alpha,
+        k_rings=cfg.k_rings, n_rounds=cfg.n_rounds)
+    return float(np.mean(np.asarray(d)))
 
 
 def train_dqn(cfg: DQNConfig, eval_every: int = 25,
               eval_graphs: int = 3) -> Tuple[QParams, TrainLog]:
-    """Algorithm 2: Q-learning with experience replay."""
+    """Algorithm 2: Q-learning with experience replay.
+
+    ``cfg.rollout="device"`` runs each epoch as one fused device call over
+    ``cfg.n_envs`` graphs (the :mod:`repro.core.rollout` engine);
+    ``"host"`` keeps the original per-step host loop for debugging.
+    """
+    assert cfg.rollout in ("device", "host"), cfg.rollout
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     params = init_qparams(key, cfg.p, cfg.h)
     opt_state = adamw_init(params)
-    buffer = ReplayBuffer(cfg.buffer_capacity, cfg.n)
     test_ws = [make_latency(cfg.dist, cfg.n, seed=10_000 + i)
                for i in range(eval_graphs)]
     log = TrainLog([], [], [], [], 0.0)
+    n, k, n_envs = cfg.n, cfg.k_rings, cfg.n_envs
     t0 = time.time()
-    for epoch in range(cfg.epochs):
-        eps = max(1.0 - epoch / cfg.eps_decay, cfg.eps_min)
-        w = make_latency(cfg.dist, cfg.n, seed=cfg.seed * 77_000 + epoch)
-        params, opt_state, train_d, losses, _ = _run_episode(
-            params, cfg, w, eps, rng, buffer, opt_state, train=True)
-        if epoch % eval_every == 0 or epoch == cfg.epochs - 1:
-            test_d = float(np.mean([
-                construct_ring_dqn(params, cfg, tw, rng)[1] for tw in test_ws]))
-            log.epochs.append(epoch)
-            log.train_diam.append(train_d)
-            log.test_diam.append(test_d)
-            log.loss.append(float(np.mean(losses)) if losses else float("nan"))
+
+    if cfg.rollout == "device":
+        slots = rollout.graph_slots(cfg.buffer_capacity, n_envs, k, n)
+        buf = rollout.init_buffer(cfg.buffer_capacity, n, slots)
+        for epoch in range(cfg.epochs):
+            eps = max(1.0 - epoch / cfg.eps_decay, cfg.eps_min)
+            ws = np.stack([
+                make_latency(cfg.dist, n,
+                             seed=cfg.seed * 77_000 + epoch * n_envs + i)
+                for i in range(n_envs)])
+            plan = make_plan(rng, n_envs, k, n, cfg.updates_per_step,
+                             cfg.batch_size)
+            gids = jnp.asarray((np.arange(n_envs) + epoch * n_envs) % slots,
+                               jnp.int32)
+            params, opt_state, buf, d, losses, _a, _r = rollout.train_epoch(
+                params, opt_state, buf, jnp.asarray(ws, jnp.float32), gids,
+                *_plan_arrays(plan), jnp.asarray(plan.sample_u),
+                eps, cfg.gamma, cfg.lr, cfg.alpha,
+                k_rings=k, n_rounds=cfg.n_rounds, batch_size=cfg.batch_size,
+                updates_per_step=cfg.updates_per_step)
+            if epoch % eval_every == 0 or epoch == cfg.epochs - 1:
+                losses = np.asarray(losses)
+                losses = losses[np.isfinite(losses)]
+                log.epochs.append(epoch)
+                log.train_diam.append(float(np.mean(np.asarray(d))))
+                log.test_diam.append(
+                    _eval_diameters_device(params, cfg, test_ws, rng))
+                log.loss.append(float(np.mean(losses)) if losses.size
+                                else float("nan"))
+    else:
+        buffer = ReplayBuffer(cfg.buffer_capacity, n)
+        for epoch in range(cfg.epochs):
+            eps = max(1.0 - epoch / cfg.eps_decay, cfg.eps_min)
+            train_ds, losses = [], []
+            for i in range(n_envs):
+                w = make_latency(cfg.dist, n,
+                                 seed=cfg.seed * 77_000 + epoch * n_envs + i)
+                plan = make_plan(rng, 1, k, n, cfg.updates_per_step,
+                                 cfg.batch_size)
+                gid = buffer.register_graph(w)
+                params, opt_state, train_d, ls, _, _ = _run_episode(
+                    params, cfg, w, eps, plan, 0, buffer, opt_state,
+                    train=True, gid=gid)
+                train_ds.append(train_d)
+                losses.extend(ls)
+            if epoch % eval_every == 0 or epoch == cfg.epochs - 1:
+                test_d = float(np.mean([
+                    construct_ring_dqn(params, cfg, tw, rng)[1]
+                    for tw in test_ws]))
+                log.epochs.append(epoch)
+                log.train_diam.append(float(np.mean(train_ds)))
+                log.test_diam.append(test_d)
+                log.loss.append(float(np.mean(losses)) if losses
+                                else float("nan"))
     log.seconds = time.time() - t0
+    log.steps_per_sec = (cfg.epochs * n_envs * k * n) / max(log.seconds, 1e-9)
     return params, log
 
 
 def construct_ring_dqn(params: QParams, cfg: DQNConfig, w: np.ndarray,
                        rng: np.random.Generator) -> Tuple[List[np.ndarray], float]:
-    """Greedy (eps=0) K-ring construction with the trained Q (Alg. 1)."""
-    params, _, d, _, perms = _run_episode(params, cfg, w, eps=0.0, rng=rng,
-                                          buffer=None, train=False)
-    return perms, d
+    """Greedy (eps=0) K-ring construction with the trained Q (Alg. 1).
+
+    Both rollout modes consume ``rng`` identically (one plan draw), so they
+    produce the same rings at the same seed.
+    """
+    plan = make_plan(rng, 1, cfg.k_rings, cfg.n)
+    if cfg.rollout == "host":
+        _, _, d, _, perms, _ = _run_episode(params, cfg, w, 0.0, plan, 0,
+                                            buffer=None, train=False)
+        return perms, d
+    actions, _, d = rollout.rollout_episodes(
+        params, jnp.asarray(w, jnp.float32)[None], *_plan_arrays(plan),
+        0.0, cfg.alpha, k_rings=cfg.k_rings, n_rounds=cfg.n_rounds)
+    perms = rollout.perms_from_actions(plan.starts, np.asarray(actions),
+                                       cfg.k_rings, cfg.n)[0]
+    return perms, float(np.asarray(d)[0])
 
 
 def dgro_overlay(params: QParams, cfg: DQNConfig, w: np.ndarray,
                  n_starts: int = 10, seed: int = 0):
     """Paper §VII-B.2: build n_starts K-ring topologies with the trained Q,
     keep the best — as a :class:`repro.overlay.Overlay` (policy
-    ``"dgro-dqn"``; the winning episode's diameter seeds the cache)."""
+    ``"dgro-dqn"``; the winning episode's diameter seeds the cache).
+
+    With ``cfg.rollout="device"`` all ``n_starts`` constructions run as ONE
+    vmapped batched rollout call instead of a sequential host loop; per-
+    start plans come from ``default_rng(seed + s)`` in both modes, so the
+    winning rings match the host path at fixed seeds.
+    """
     from repro.overlay import Overlay
 
-    best_perms, best_d = None, float("inf")
-    for s in range(n_starts):
-        rng = np.random.default_rng(seed + s)
-        perms, d = construct_ring_dqn(params, cfg, w, rng)
-        if d < best_d:
-            best_perms, best_d = perms, d
+    n, k = cfg.n, cfg.k_rings
+    if cfg.rollout == "host":
+        best_perms, best_d = None, float("inf")
+        for s in range(n_starts):
+            rng = np.random.default_rng(seed + s)
+            perms, d = construct_ring_dqn(params, cfg, w, rng)
+            if d < best_d:
+                best_perms, best_d = perms, d
+        return Overlay.from_rings(
+            w, best_perms, policy="dgro-dqn").cache_diameter(best_d)
+
+    plans = [make_plan(np.random.default_rng(seed + s), 1, k, n)
+             for s in range(n_starts)]
+    starts = np.concatenate([p.starts for p in plans], axis=0)    # (S, K)
+    eps_u = np.concatenate([p.eps_u for p in plans], axis=1)      # (T, S)
+    choice_u = np.concatenate([p.choice_u for p in plans], axis=1)
+    w_b = np.broadcast_to(np.asarray(w, np.float32), (n_starts, n, n))
+    actions, _, d = rollout.rollout_episodes(
+        params, jnp.asarray(w_b), jnp.asarray(starts), jnp.asarray(eps_u),
+        jnp.asarray(choice_u), 0.0, cfg.alpha,
+        k_rings=k, n_rounds=cfg.n_rounds)
+    d = np.asarray(d)
+    best = int(np.argmin(d))
+    perms = rollout.perms_from_actions(starts, np.asarray(actions), k, n)[best]
     return Overlay.from_rings(
-        w, best_perms, policy="dgro-dqn").cache_diameter(best_d)
+        w, perms, policy="dgro-dqn").cache_diameter(float(d[best]))
 
 
 def dgro_topology(params: QParams, cfg: DQNConfig, w: np.ndarray,

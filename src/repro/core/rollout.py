@@ -1,0 +1,395 @@
+"""Device-resident vectorized DQN episode engine (paper §IV, Algs. 1-2).
+
+The original Q-learning driver ran every episode from the host: one device
+round-trip per action (Q forward), a full O(N^3 log N) min-plus APSP per
+edge added (the reward), and a host-side replay buffer — O(k * N *
+updates) device calls per epoch.  This module fuses an entire epoch into
+ONE jit'd ``lax.scan``:
+
+* **E parallel environments** — independent latency graphs advance in
+  lockstep under ``vmap``; an epoch processes an (E, N, N) stack.
+* **eps-greedy inside the scan** — a fixed-shape masked
+  :func:`repro.core.embedding.q_values_batch` scores all E states per step;
+  random exploration consumes pre-generated uniforms (:class:`RolloutPlan`)
+  so the host debug path can replay the *identical* decision sequence.
+* **incremental rewards** — the scan carries the exact APSP matrix of the
+  partial solution and repairs it per edge with the O(N^2)
+  :func:`repro.core.diameter.relax_edge_update` (shared with
+  ``dynamics.incremental``), replacing the per-edge O(N^3) full APSP.
+* **device replay buffer** — fixed-capacity transition arrays plus a write
+  pointer live in the scan carry.  Transitions store a *graph index* into a
+  small ring table of epoch graphs instead of a full (N, N) latency copy
+  per step (every step of an epoch shares one graph).
+* **fused TD updates** — once the buffer holds a batch,
+  ``jax.lax.cond`` switches on per-step AdamW TD updates, sampling via the
+  plan's uniforms.
+
+Determinism contract: the engine draws NO randomness of its own.  All
+stochastic decisions come from a :class:`RolloutPlan` pre-generated on the
+host from a ``numpy.random.Generator``, so a host loop consuming the same
+plan (``qlearning._run_episode``) makes identical decisions and builds
+identical rings — the parity tests in ``tests/test_rollout.py`` assert
+this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.diameter import INF, largest_cc_diameter, relax_edge_update
+from repro.core.embedding import QParams, q_values, q_values_batch
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+__all__ = [
+    "RolloutPlan", "make_plan", "DeviceBuffer", "init_buffer",
+    "graph_slots", "rollout_episodes", "train_epoch", "td_update_impl",
+    "perms_from_actions",
+]
+
+
+# ---------------------------------------------------------------------------
+# pre-generated randomness (shared by device scan and host debug loop)
+# ---------------------------------------------------------------------------
+
+class RolloutPlan(NamedTuple):
+    """Every random draw an epoch makes, generated up front on the host.
+
+    ``starts``: (E, K) ring start nodes; ``eps_u``/``choice_u``: (T, E)
+    uniforms for the eps-greedy coin and the random-action pick
+    (T = K * N steps); ``sample_u``: (T, U, B) uniforms for replay
+    sampling (empty when not training).
+    """
+
+    starts: np.ndarray
+    eps_u: np.ndarray
+    choice_u: np.ndarray
+    sample_u: np.ndarray
+
+
+def make_plan(rng: np.random.Generator, n_envs: int, k_rings: int, n: int,
+              updates_per_step: int = 0, batch_size: int = 0) -> RolloutPlan:
+    t = k_rings * n
+    starts = rng.integers(0, n, size=(n_envs, k_rings)).astype(np.int32)
+    eps_u = rng.random((t, n_envs), dtype=np.float32)
+    choice_u = rng.random((t, n_envs), dtype=np.float32)
+    if updates_per_step and batch_size:
+        sample_u = rng.random((t, updates_per_step, batch_size),
+                              dtype=np.float32)
+    else:
+        sample_u = np.zeros((t, 0, 0), np.float32)
+    return RolloutPlan(starts, eps_u, choice_u, sample_u)
+
+
+# ---------------------------------------------------------------------------
+# device-resident replay buffer (arrays + write pointer in the scan carry)
+# ---------------------------------------------------------------------------
+
+class DeviceBuffer(NamedTuple):
+    """Alg. 2 memory M as a pytree of fixed-shape device arrays.
+
+    ``table`` is a small ring of epoch latency graphs; transitions store
+    ``widx`` (an index into it) instead of a per-step (N, N) copy.
+    """
+
+    table: jnp.ndarray         # (G, N, N) f32 epoch-graph ring
+    widx: jnp.ndarray          # (C,) i32 graph index
+    adj: jnp.ndarray           # (C, N, N) u8 pre-action adjacency
+    v: jnp.ndarray             # (C,) i32
+    action: jnp.ndarray        # (C,) i32
+    reward: jnp.ndarray        # (C,) f32
+    adj_next: jnp.ndarray      # (C, N, N) u8
+    v_next: jnp.ndarray        # (C,) i32
+    visited_next: jnp.ndarray  # (C, N) u8
+    done: jnp.ndarray          # (C,) f32
+    size: jnp.ndarray          # () i32
+    ptr: jnp.ndarray           # () i32
+
+
+def graph_slots(capacity: int, n_envs: int, k_rings: int, n: int) -> int:
+    """Ring-table size that guarantees no live transition's graph is ever
+    overwritten: a transition survives at most ceil(C / pushes-per-epoch)
+    epochs (FIFO overwrite), so one extra epoch of slots is enough."""
+    pushes_per_epoch = max(n_envs * k_rings * (n - 1), 1)
+    return n_envs * (int(np.ceil(capacity / pushes_per_epoch)) + 1)
+
+
+def init_buffer(capacity: int, n: int, slots: int) -> DeviceBuffer:
+    return DeviceBuffer(
+        table=jnp.zeros((slots, n, n), jnp.float32),
+        widx=jnp.zeros((capacity,), jnp.int32),
+        adj=jnp.zeros((capacity, n, n), jnp.uint8),
+        v=jnp.zeros((capacity,), jnp.int32),
+        action=jnp.zeros((capacity,), jnp.int32),
+        reward=jnp.zeros((capacity,), jnp.float32),
+        adj_next=jnp.zeros((capacity, n, n), jnp.uint8),
+        v_next=jnp.zeros((capacity,), jnp.int32),
+        visited_next=jnp.zeros((capacity, n), jnp.uint8),
+        done=jnp.zeros((capacity,), jnp.float32),
+        size=jnp.zeros((), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+def _push(buf: DeviceBuffer, gids, adj_prev, v, a, reward, adj_next,
+          visited_next, done) -> DeviceBuffer:
+    cap = buf.v.shape[0]
+    e = v.shape[0]
+    idx = (buf.ptr + jnp.arange(e, dtype=jnp.int32)) % cap
+    return buf._replace(
+        widx=buf.widx.at[idx].set(gids),
+        adj=buf.adj.at[idx].set(adj_prev.astype(jnp.uint8)),
+        v=buf.v.at[idx].set(v),
+        action=buf.action.at[idx].set(a),
+        reward=buf.reward.at[idx].set(reward),
+        adj_next=buf.adj_next.at[idx].set(adj_next.astype(jnp.uint8)),
+        v_next=buf.v_next.at[idx].set(a),
+        visited_next=buf.visited_next.at[idx].set(
+            visited_next.astype(jnp.uint8)),
+        done=buf.done.at[idx].set(done.astype(jnp.float32)),
+        size=jnp.minimum(buf.size + e, cap),
+        ptr=(buf.ptr + e) % cap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# TD update (shared math: host jit wrapper in qlearning, in-scan here)
+# ---------------------------------------------------------------------------
+
+def td_update_impl(params: QParams, opt_state, w, adj, v, action, reward,
+                   adj_next, v_next, visited_next, done, gamma, lr,
+                   n_rounds: int = 3):
+    """One AdamW step on the squared TD error over a replay batch."""
+
+    def q_sa(p, w1, a1, v1, act1):
+        return q_values(p, w1, a1.astype(jnp.float32), v1, n_rounds)[act1]
+
+    def target(w1, an1, vn1, vis1, d1, r1):
+        qn = q_values(params, w1, an1.astype(jnp.float32), vn1, n_rounds)
+        qn = jnp.where(vis1.astype(bool), -jnp.inf, qn)
+        best = jnp.max(qn)
+        best = jnp.where(jnp.isfinite(best), best, 0.0)
+        return r1 + gamma * best * (1.0 - d1)
+
+    y = jax.vmap(target)(w, adj_next, v_next, visited_next,
+                         done.astype(jnp.float32), reward)
+    y = jax.lax.stop_gradient(y)
+
+    def loss_fn(p):
+        q = jax.vmap(q_sa, in_axes=(None, 0, 0, 0, 0))(p, w, adj, v, action)
+        return jnp.mean(jnp.square(y - q))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    cfg = AdamWConfig(lr=lr, b1=0.9, b2=0.999, clip_norm=5.0)
+    new_params, new_state, _ = adamw_update(cfg, grads, opt_state, params)
+    return new_params, new_state, loss
+
+
+# ---------------------------------------------------------------------------
+# the fused episode step (shared by rollout-only and training scans)
+# ---------------------------------------------------------------------------
+
+def _select_actions(params, w_batch, adj, visited, v, cur_start, eps_u_t,
+                    choice_u_t, eps, closing, n_rounds: int):
+    """Fixed-shape eps-greedy over all E environments (one batched Q call).
+
+    The random branch picks the ``floor(u * n_unvisited)``-th unvisited
+    node — the same formula the host debug loop applies to the same plan
+    uniforms, so decisions match bit-for-bit."""
+    q = q_values_batch(params, w_batch, adj, v, n_rounds=n_rounds)  # (E, N)
+    q = jnp.where(visited, -jnp.inf, q)
+    greedy = jnp.argmax(q, axis=1).astype(jnp.int32)
+    n_unvis = jnp.sum(~visited, axis=1).astype(jnp.int32)
+    ridx = (choice_u_t * n_unvis.astype(jnp.float32)).astype(jnp.int32)
+    ridx = jnp.minimum(ridx, n_unvis - 1)
+    order = jnp.cumsum(~visited, axis=1).astype(jnp.int32) - 1   # (E, N)
+    rand_a = jnp.argmax((order == ridx[:, None]) & ~visited,
+                        axis=1).astype(jnp.int32)
+    a = jnp.where(eps_u_t < eps, rand_a, greedy)
+    return jnp.where(closing, cur_start, a)
+
+
+def _apply_edge(w_batch, dist, adj, v, a, prev_d, alpha):
+    """Add edge (v, a) in every env: O(N^2) relax + largest-CC diameter."""
+    e_ix = jnp.arange(v.shape[0])
+    w_edge = w_batch[e_ix, v, a]
+    adj = adj.at[e_ix, v, a].set(1.0)
+    adj = adj.at[e_ix, a, v].set(1.0)
+    dist = jax.vmap(relax_edge_update)(dist, v, a, w_edge)
+    new_d = jax.vmap(largest_cc_diameter)(dist)
+    reward = prev_d - new_d - alpha * w_edge
+    return dist, adj, new_d, reward, w_edge
+
+
+def _episode_init(n_envs: int, n: int):
+    dist0 = jnp.full((n_envs, n, n), INF, jnp.float32)
+    ar = jnp.arange(n)
+    dist0 = dist0.at[:, ar, ar].set(0.0)
+    return (dist0,
+            jnp.zeros((n_envs, n, n), jnp.float32),      # adjacency (0/1)
+            jnp.zeros((n_envs, n), bool),                # visited
+            jnp.zeros((n_envs,), jnp.int32),             # v
+            jnp.zeros((n_envs,), jnp.int32),             # current ring start
+            jnp.zeros((n_envs,), jnp.float32))           # prev diameter
+
+
+def _step_masks(k_rings: int, n: int):
+    """Static per-step flags: is this step a ring start / a closing edge?"""
+    t = np.arange(k_rings * n)
+    return (jnp.asarray(t % n == 0), jnp.asarray(t % n == n - 1),
+            jnp.asarray(t // n == k_rings - 1))
+
+
+def _reset_ring(ring_start, start_t, visited, v, cur_start):
+    n_envs, n = visited.shape
+    onehot = jnp.zeros((n_envs, n), bool).at[
+        jnp.arange(n_envs), start_t].set(True)
+    visited = jnp.where(ring_start, onehot, visited)
+    v = jnp.where(ring_start, start_t, v)
+    cur_start = jnp.where(ring_start, start_t, cur_start)
+    return visited, v, cur_start
+
+
+# ---------------------------------------------------------------------------
+# public engine entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k_rings", "n_rounds"))
+def rollout_episodes(params: QParams, w_batch: jnp.ndarray,
+                     starts: jnp.ndarray, eps_u: jnp.ndarray,
+                     choice_u: jnp.ndarray, eps, alpha, *,
+                     k_rings: int, n_rounds: int = 3):
+    """Build K rings in each of E environments — ONE device call.
+
+    ``w_batch``: (E, N, N) latency stack; ``starts``/``eps_u``/``choice_u``
+    from :func:`make_plan`.  Returns ``(actions (T, E), rewards (T, E),
+    final_diameter (E,))`` with T = K * N scan steps.
+    """
+    n_envs, n = w_batch.shape[0], w_batch.shape[1]
+    ring_start, closing, _ = _step_masks(k_rings, n)
+    start_t = jnp.repeat(starts.T, n, axis=0)            # (T, E)
+    eps = jnp.float32(eps)
+    alpha = jnp.float32(alpha)
+
+    def step(carry, xs):
+        dist, adj, visited, v, cur_start, prev_d = carry
+        rs, cl, st, eu, cu = xs
+        visited, v, cur_start = _reset_ring(rs, st, visited, v, cur_start)
+        a = _select_actions(params, w_batch, adj, visited, v, cur_start,
+                            eu, cu, eps, cl, n_rounds)
+        dist, adj, new_d, reward, _ = _apply_edge(
+            w_batch, dist, adj, v, a, prev_d, alpha)
+        visited = visited.at[jnp.arange(n_envs), a].set(True)
+        v = jnp.where(cl, v, a)
+        return (dist, adj, visited, v, cur_start, new_d), (a, reward)
+
+    carry0 = _episode_init(n_envs, n)
+    (dist, *_rest, prev_d), (actions, rewards) = jax.lax.scan(
+        step, carry0, (ring_start, closing, start_t, eps_u, choice_u))
+    return actions, rewards, prev_d
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k_rings", "n_rounds", "batch_size", "updates_per_step"),
+    donate_argnames=("buf",))
+def train_epoch(params: QParams, opt_state, buf: DeviceBuffer,
+                w_batch: jnp.ndarray, gids: jnp.ndarray, starts: jnp.ndarray,
+                eps_u: jnp.ndarray, choice_u: jnp.ndarray,
+                sample_u: jnp.ndarray, eps, gamma, lr, alpha, *,
+                k_rings: int, n_rounds: int = 3, batch_size: int = 32,
+                updates_per_step: int = 1):
+    """One full training epoch (Alg. 2) fused into a single device call.
+
+    Episodes over the (E, N, N) graph stack with eps-greedy actions,
+    incremental-relax rewards, transition pushes into the device buffer
+    (graph table slots ``gids``) and — once the buffer holds
+    ``batch_size`` transitions — ``updates_per_step`` TD/AdamW updates per
+    step via ``lax.cond``.  Returns ``(params, opt_state, buf,
+    final_diameter (E,), losses (T,), actions (T, E), rewards (T, E))``;
+    ``losses`` is the per-step mean over the step's TD updates, NaN on
+    steps before the buffer fills.  ``buf`` is donated — the caller must
+    rebind it to the returned buffer and not reuse the argument.
+    """
+    n_envs, n = w_batch.shape[0], w_batch.shape[1]
+    ring_start, closing, last_ring = _step_masks(k_rings, n)
+    start_t = jnp.repeat(starts.T, n, axis=0)
+    eps = jnp.float32(eps)
+    gamma = jnp.float32(gamma)
+    lr = jnp.float32(lr)
+    alpha = jnp.float32(alpha)
+    buf = buf._replace(table=buf.table.at[gids].set(w_batch))
+
+    def td_updates(ops):
+        p, o, b, su = ops
+        total = jnp.float32(0.0)
+        for ui in range(updates_per_step):
+            idx = (su[ui] * b.size.astype(jnp.float32)).astype(jnp.int32)
+            idx = jnp.minimum(idx, b.size - 1)
+            p, o, loss = td_update_impl(
+                p, o, b.table[b.widx[idx]], b.adj[idx], b.v[idx],
+                b.action[idx], b.reward[idx], b.adj_next[idx], b.v_next[idx],
+                b.visited_next[idx], b.done[idx], gamma, lr, n_rounds)
+            total = total + loss
+        return p, o, total / updates_per_step
+
+    def td_skip(ops):
+        p, o, _b, _su = ops
+        return p, o, jnp.float32(jnp.nan)
+
+    def step(carry, xs):
+        p, o, b, dist, adj, visited, v, cur_start, prev_d = carry
+        rs, cl, last, st, eu, cu, su = xs
+        visited, v, cur_start = _reset_ring(rs, st, visited, v, cur_start)
+        adj_prev = adj
+        a = _select_actions(p, w_batch, adj, visited, v, cur_start,
+                            eu, cu, eps, cl, n_rounds)
+        dist, adj, new_d, reward, _ = _apply_edge(
+            w_batch, dist, adj, v, a, prev_d, alpha)
+        visited_next = visited.at[jnp.arange(n_envs), a].set(True)
+        done = jnp.broadcast_to(cl & last, (n_envs,))
+        b = jax.lax.cond(
+            cl, lambda bb: bb,
+            lambda bb: _push(bb, gids, adj_prev, v, a, reward, adj,
+                             visited_next, done), b)
+        visited = visited_next
+        v = jnp.where(cl, v, a)
+        p, o, loss = jax.lax.cond(b.size >= batch_size, td_updates, td_skip,
+                                  (p, o, b, su))
+        return (p, o, b, dist, adj, visited, v, cur_start, new_d), \
+            (a, reward, loss)
+
+    carry0 = (params, opt_state, buf) + _episode_init(n_envs, n)
+    xs = (ring_start, closing, last_ring, start_t, eps_u, choice_u, sample_u)
+    (params, opt_state, buf, *_rest, prev_d), (actions, rewards, losses) = \
+        jax.lax.scan(step, carry0, xs)
+    return params, opt_state, buf, prev_d, losses, actions, rewards
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers
+# ---------------------------------------------------------------------------
+
+def perms_from_actions(starts: np.ndarray, actions: np.ndarray,
+                       k_rings: int, n: int) -> List[List[np.ndarray]]:
+    """Reassemble ring permutations from scan outputs.
+
+    ``starts``: (E, K); ``actions``: (T, E).  Ring r of env e is its start
+    node followed by the first N-1 actions of that ring's steps (the N-th
+    action is the closing edge back to the start).
+    """
+    starts = np.asarray(starts)
+    actions = np.asarray(actions)
+    out: List[List[np.ndarray]] = []
+    for e in range(starts.shape[0]):
+        perms = []
+        for r in range(k_rings):
+            perm = np.empty(n, np.int64)
+            perm[0] = starts[e, r]
+            perm[1:] = actions[r * n:(r + 1) * n - 1, e]
+            perms.append(perm)
+        out.append(perms)
+    return out

@@ -42,7 +42,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import batcheval
-from repro.core.diameter import INF, is_edge, largest_cc_diameter
+from repro.core.diameter import (INF, is_edge, largest_cc_diameter,
+                                 relax_edge_update)
 
 __all__ = [
     "relax_edge",
@@ -60,14 +61,10 @@ __all__ = [
 # jit'd pure updates (single replica + vmapped batch variants)
 # ---------------------------------------------------------------------------
 
-def _relax_edge_impl(dist: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
-                     wuv: jnp.ndarray) -> jnp.ndarray:
-    """Exact O(N^2) repair of an APSP matrix after inserting edge (u, v)."""
-    du = dist[:, u]                       # distances into u
-    dv = dist[:, v]
-    via = jnp.minimum(du[:, None] + wuv + dist[v, :][None, :],
-                      dv[:, None] + wuv + dist[u, :][None, :])
-    return jnp.minimum(dist, via)
+# Exact O(N^2) edge-insert repair.  The primitive itself lives in
+# ``core.diameter`` so the DQN rollout engine (``core.rollout``) can reuse it
+# as its in-scan reward update without a core -> dynamics dependency.
+_relax_edge_impl = relax_edge_update
 
 
 def _join_node_impl(dist: jnp.ndarray, row: jnp.ndarray,

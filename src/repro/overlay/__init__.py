@@ -19,9 +19,10 @@ Registered builders and the paper sections they reproduce:
 builder               paper section
 ====================  =====================================================
 ``"dgro"``            §V adaptive selection: rho-guided random/nearest ring
-                      mix, best candidate by batched diameter (Alg. 3; the
-                      trained-DQN path is ``core.qlearning.dgro_overlay``,
-                      §IV Algs. 1-2)
+                      mix, best candidate by batched diameter (Alg. 3)
+``"dgro-dqn"``        §IV Algs. 1-2: deep-Q ring construction — trains the
+                      DQN, then batched multi-start greedy rollouts through
+                      the device episode engine (``core.rollout``)
 ``"chord"``           §II/§V-A baseline: identifier ring + 2^j fingers
 ``"rapid"``           §V-A baseline: K consistent-hash rings
 ``"perigee"``         §V-A baseline: d nearest neighbours + one ring
@@ -37,14 +38,15 @@ without touching call sites.
 """
 from .core import Overlay  # noqa: F401
 from .registry import build, builders, get_builder, register  # noqa: F401
-from .policies import (ChordConfig, DGROConfig, GAConfig,  # noqa: F401
-                       NearestRingsConfig, ParallelConfig, PerigeeConfig,
-                       RandomRingsConfig, RapidConfig, chord_finger_edges,
-                       nearest_neighbour_edges)
+from .policies import (ChordConfig, DGROConfig, DGRODQNConfig,  # noqa: F401
+                       GAConfig, NearestRingsConfig, ParallelConfig,
+                       PerigeeConfig, RandomRingsConfig, RapidConfig,
+                       chord_finger_edges, nearest_neighbour_edges)
 
 __all__ = [
     "Overlay", "build", "builders", "get_builder", "register",
-    "ChordConfig", "DGROConfig", "GAConfig", "NearestRingsConfig",
-    "ParallelConfig", "PerigeeConfig", "RandomRingsConfig", "RapidConfig",
+    "ChordConfig", "DGROConfig", "DGRODQNConfig", "GAConfig",
+    "NearestRingsConfig", "ParallelConfig", "PerigeeConfig",
+    "RandomRingsConfig", "RapidConfig",
     "chord_finger_edges", "nearest_neighbour_edges",
 ]

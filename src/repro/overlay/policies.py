@@ -26,8 +26,8 @@ from .registry import register
 
 __all__ = [
     "RandomRingsConfig", "NearestRingsConfig", "ChordConfig", "RapidConfig",
-    "PerigeeConfig", "DGROConfig", "GAConfig", "ParallelConfig",
-    "chord_finger_edges", "nearest_neighbour_edges",
+    "PerigeeConfig", "DGROConfig", "DGRODQNConfig", "GAConfig",
+    "ParallelConfig", "chord_finger_edges", "nearest_neighbour_edges",
 ]
 
 
@@ -208,6 +208,36 @@ def _build_dgro(w: np.ndarray, cfg: DGROConfig,
     best = candidates[int(np.argmin(scores))]
     return Overlay.from_rings(w, best,
                               policy="dgro").cache_diameter(scores.min())
+
+
+@dataclasses.dataclass(frozen=True)
+class DGRODQNConfig:
+    """§IV Algs. 1-2: train the deep-Q ring constructor on graphs of the
+    target size and distribution, then keep the best of ``n_starts``
+    greedy constructions — all of them built in ONE vmapped rollout call
+    through the device episode engine (``repro.core.rollout``).
+    ``rollout="host"`` switches to the step-by-step debug loop."""
+    k: Optional[int] = None
+    epochs: int = 60
+    n_starts: int = 10
+    dist: str = "uniform"
+    rollout: str = "device"
+
+
+@register("dgro-dqn", config=DGRODQNConfig)
+def _build_dgro_dqn(w: np.ndarray, cfg: DGRODQNConfig,
+                    rng: np.random.Generator) -> Overlay:
+    from repro.core.qlearning import (DQNConfig, dgro_overlay,  # jax-heavy
+                                      train_dqn)
+
+    n = w.shape[0]
+    k = default_num_rings(n) if cfg.k is None else cfg.k
+    seed = int(rng.integers(2**31))
+    dcfg = DQNConfig(n=n, k_rings=k, epochs=cfg.epochs,
+                     eps_decay=max(cfg.epochs // 2, 1), dist=cfg.dist,
+                     seed=seed, rollout=cfg.rollout)
+    params, _ = train_dqn(dcfg, eval_every=max(cfg.epochs, 1), eval_graphs=1)
+    return dgro_overlay(params, dcfg, w, n_starts=cfg.n_starts, seed=seed)
 
 
 @register("ga", config=GAConfig)

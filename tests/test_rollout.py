@@ -1,0 +1,146 @@
+"""repro.core.rollout: the device-resident vectorized episode engine."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import rollout
+from repro.core.embedding import init_qparams
+from repro.core.qlearning import DQNConfig, _run_episode
+from repro.core.topology import make_latency
+from repro.train.optimizer import adamw_init
+
+
+def _params(seed=0, p=8, h=16):
+    return init_qparams(jax.random.PRNGKey(seed), p, h)
+
+
+def test_make_plan_shapes_and_determinism():
+    plan = rollout.make_plan(np.random.default_rng(5), n_envs=3, k_rings=2,
+                             n=7, updates_per_step=2, batch_size=4)
+    assert plan.starts.shape == (3, 2)
+    assert plan.eps_u.shape == (14, 3) and plan.choice_u.shape == (14, 3)
+    assert plan.sample_u.shape == (14, 2, 4)
+    assert plan.starts.min() >= 0 and plan.starts.max() < 7
+    again = rollout.make_plan(np.random.default_rng(5), 3, 2, 7, 2, 4)
+    assert np.array_equal(plan.eps_u, again.eps_u)
+    # no training -> empty sampling block
+    lean = rollout.make_plan(np.random.default_rng(5), 3, 2, 7)
+    assert lean.sample_u.shape == (14, 0, 0)
+
+
+def test_rollout_output_shapes_and_valid_rings():
+    n, k, n_envs = 8, 2, 4
+    cfg = DQNConfig(n=n, k_rings=k, p=8, h=16)
+    params = _params()
+    ws = np.stack([make_latency("uniform", n, seed=i) for i in range(n_envs)])
+    plan = rollout.make_plan(np.random.default_rng(0), n_envs, k, n)
+    actions, rewards, d = rollout.rollout_episodes(
+        params, jnp.asarray(ws, jnp.float32), jnp.asarray(plan.starts),
+        jnp.asarray(plan.eps_u), jnp.asarray(plan.choice_u), 0.3, cfg.alpha,
+        k_rings=k, n_rounds=2)
+    assert actions.shape == (k * n, n_envs)
+    assert rewards.shape == (k * n, n_envs)
+    assert d.shape == (n_envs,)
+    assert bool(jnp.all(jnp.isfinite(rewards)))
+    assert bool(jnp.all(d > 0))
+    # every episode's rings are permutations of range(n)
+    for perms in rollout.perms_from_actions(plan.starts, np.asarray(actions),
+                                            k, n):
+        for perm in perms:
+            assert np.array_equal(np.sort(perm), np.arange(n))
+
+
+def test_multi_env_parity_with_host_loop():
+    """E vmapped environments match E sequential host episodes consuming
+    the same plan columns — different graphs per env."""
+    n, k, n_envs = 8, 2, 3
+    cfg = DQNConfig(n=n, k_rings=k, p=8, h=16, n_rounds=2)
+    params = _params(seed=2)
+    ws = np.stack([make_latency("gaussian", n, seed=10 + i)
+                   for i in range(n_envs)])
+    plan = rollout.make_plan(np.random.default_rng(8), n_envs, k, n)
+    actions, rewards, d = rollout.rollout_episodes(
+        params, jnp.asarray(ws, jnp.float32), jnp.asarray(plan.starts),
+        jnp.asarray(plan.eps_u), jnp.asarray(plan.choice_u), 0.5, cfg.alpha,
+        k_rings=k, n_rounds=cfg.n_rounds)
+    perms_dev = rollout.perms_from_actions(plan.starts, np.asarray(actions),
+                                           k, n)
+    for e in range(n_envs):
+        _, _, d_h, _, perms_h, rw_h = _run_episode(
+            params, cfg, ws[e], 0.5, plan, e, buffer=None, train=False)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(perms_h, perms_dev[e])), e
+        assert np.allclose(rw_h, np.asarray(rewards)[:, e], atol=1e-4)
+        assert abs(d_h - float(np.asarray(d)[e])) <= 1e-3 * max(1.0, d_h)
+
+
+def test_graph_slots_reuse_is_safe():
+    """A graph-table slot is only reused after every transition referencing
+    its previous occupant has been overwritten in the ring buffer."""
+    for cap, n_envs, k, n in [(20000, 1, 2, 14), (500, 4, 2, 8),
+                              (64, 2, 1, 6), (7, 3, 2, 5)]:
+        slots = rollout.graph_slots(cap, n_envs, k, n)
+        pushes_per_epoch = n_envs * k * (n - 1)
+        epochs_to_reuse = slots // n_envs
+        assert (epochs_to_reuse - 1) * pushes_per_epoch >= cap, \
+            (cap, n_envs, k, n, slots)
+
+
+def test_train_epoch_buffer_invariants_and_updates():
+    n, k, n_envs, cap, batch = 8, 2, 2, 64, 8
+    cfg = DQNConfig(n=n, k_rings=k, p=8, h=16, n_rounds=2)
+    params = _params(seed=1)
+    opt_state = adamw_init(params)
+    slots = rollout.graph_slots(cap, n_envs, k, n)
+    buf = rollout.init_buffer(cap, n, slots)
+    ws = np.stack([make_latency("uniform", n, seed=20 + i)
+                   for i in range(n_envs)])
+    plan = rollout.make_plan(np.random.default_rng(1), n_envs, k, n,
+                             updates_per_step=1, batch_size=batch)
+    gids = jnp.asarray(np.arange(n_envs), jnp.int32)
+    params2, opt2, buf2, d, losses, actions, rewards = rollout.train_epoch(
+        params, opt_state, buf, jnp.asarray(ws, jnp.float32), gids,
+        jnp.asarray(plan.starts), jnp.asarray(plan.eps_u),
+        jnp.asarray(plan.choice_u), jnp.asarray(plan.sample_u),
+        0.8, 0.99, 5e-4, 0.1, k_rings=k, n_rounds=2, batch_size=batch,
+        updates_per_step=1)
+    # closing steps are not pushed: k*(n-1) transitions per env
+    assert int(buf2.size) == n_envs * k * (n - 1)
+    assert int(buf2.ptr) == int(buf2.size) % cap
+    # the epoch graphs landed in their table slots, transitions point at them
+    assert np.allclose(np.asarray(buf2.table[:n_envs]),
+                       ws.astype(np.float32))
+    live_widx = np.asarray(buf2.widx)[:int(buf2.size)]
+    assert set(live_widx.tolist()) <= set(range(n_envs))
+    # pushed done flags are all False (mirrors the host loop)
+    assert not np.asarray(buf2.done)[:int(buf2.size)].any()
+    # TD updates kicked in once the buffer filled: early NaN, late finite
+    l = np.asarray(losses)
+    assert np.isnan(l[0])
+    assert np.isfinite(l[-1])
+    # and the params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, params2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+    # stored rewards for the first env's first steps match the scan output
+    stored_r = np.asarray(buf2.reward)[:int(buf2.size)]
+    assert np.isfinite(stored_r).all()
+
+
+def test_device_buffer_wraps_capacity():
+    n, k, n_envs, cap = 6, 2, 2, 10     # pushes/epoch = 2*2*5 = 20 > cap
+    params = _params(seed=0)
+    opt_state = adamw_init(params)
+    slots = rollout.graph_slots(cap, n_envs, k, n)
+    buf = rollout.init_buffer(cap, n, slots)
+    ws = np.stack([make_latency("uniform", n, seed=i) for i in range(n_envs)])
+    plan = rollout.make_plan(np.random.default_rng(2), n_envs, k, n,
+                             updates_per_step=1, batch_size=4)
+    _, _, buf2, *_ = rollout.train_epoch(
+        params, opt_state, buf, jnp.asarray(ws, jnp.float32),
+        jnp.asarray(np.arange(n_envs), jnp.int32), jnp.asarray(plan.starts),
+        jnp.asarray(plan.eps_u), jnp.asarray(plan.choice_u),
+        jnp.asarray(plan.sample_u), 1.0, 0.99, 5e-4, 0.1,
+        k_rings=k, n_rounds=1, batch_size=4, updates_per_step=1)
+    assert int(buf2.size) == cap
+    assert 0 <= int(buf2.ptr) < cap
