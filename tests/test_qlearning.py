@@ -1,13 +1,22 @@
-"""DQN components: embedding forward, TD update, end-to-end improvement."""
+"""DQN components: embedding forward, replay buffer, rollout parity,
+end-to-end improvement."""
+import dataclasses
+
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
+from repro.core import rollout
 from repro.core.construction import random_ring
-from repro.core.diameter import adjacency_from_rings, diameter_scipy
-from repro.core.embedding import init_qparams, q_values
-from repro.core.qlearning import (DQNConfig, ReplayBuffer, construct_ring_dqn,
-                                  train_dqn)
+from repro.core.diameter import (INF, adjacency_from_rings, diameter,
+                                 diameter_scipy, largest_cc_diameter,
+                                 relax_edge_update)
+from repro.core.embedding import init_qparams, q_values, q_values_batch
+from repro.core.qlearning import (DQNConfig, ReplayBuffer, _run_episode,
+                                  construct_ring_dqn, dgro_overlay, train_dqn)
 from repro.core.topology import make_latency
 
 
@@ -24,6 +33,27 @@ def test_q_values_shape_finite():
     assert float(jnp.max(jnp.abs(q - q2))) > 0
 
 
+def test_q_values_batch_n_rounds_static():
+    """Regression: q_values_batch used to break when n_rounds was passed
+    (the vmap in_axes tuple had no axis spec for it)."""
+    params = init_qparams(jax.random.PRNGKey(0), p=8, h=16)
+    ws = jnp.asarray(np.stack([make_latency("uniform", 9, seed=i)
+                               for i in range(3)]), jnp.float32)
+    adjs = jnp.zeros((3, 9, 9))
+    adjs = adjs.at[:, 0, 4].set(1.0).at[:, 4, 0].set(1.0)
+    vs = jnp.asarray([0, 1, 2], jnp.int32)
+    for n_rounds in (1, 3):
+        got = q_values_batch(params, ws, adjs, vs, n_rounds=n_rounds)
+        assert got.shape == (3, 9)
+        want = jnp.stack([q_values(params, ws[i], adjs[i], vs[i], n_rounds)
+                          for i in range(3)])
+        assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # the kwarg must actually change the embedding depth
+    q1 = q_values_batch(params, ws, adjs, vs, n_rounds=1)
+    q3 = q_values_batch(params, ws, adjs, vs, n_rounds=3)
+    assert float(jnp.max(jnp.abs(q1 - q3))) > 0
+
+
 def test_replay_buffer_wraps():
     buf = ReplayBuffer(capacity=8, n=5)
     w = np.zeros((5, 5), np.float32)
@@ -34,6 +64,105 @@ def test_replay_buffer_wraps():
     rng = np.random.default_rng(0)
     batch = buf.sample(rng, 4)
     assert batch[0].shape == (4, 5, 5)
+
+
+def test_replay_buffer_graph_table_dedup_and_prune():
+    """Transitions store graph ids, not (N, N) copies: one epoch = one
+    table entry, and graphs fall out of the table once the ring buffer
+    overwrites their last transition."""
+    buf = ReplayBuffer(capacity=6, n=4)
+    w0 = make_latency("uniform", 4, seed=0)
+    w1 = make_latency("uniform", 4, seed=1)
+    a = np.zeros((4, 4), np.uint8)
+    for _ in range(3):        # an "epoch" worth of pushes on one graph
+        buf.push(w0, a, 0, 1, 0.0, a, 1, np.zeros(4, np.uint8), False)
+    assert buf.n_graphs == 1
+    gid1 = buf.register_graph(w1)
+    for _ in range(6):        # overwrites every w0 transition
+        buf.push(gid1, a, 0, 1, 0.0, a, 1, np.zeros(4, np.uint8), False)
+    buf.register_graph(make_latency("uniform", 4, seed=2))  # triggers prune
+    assert 0 not in buf.graphs          # w0 is dead
+    assert gid1 in buf.graphs           # w1 transitions are live
+    batch = buf.sample(np.random.default_rng(0), 3)
+    assert batch[0].shape == (3, 4, 4)
+    assert np.allclose(batch[0], w1.astype(np.float32))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(6, 14), st.integers(0, 10_000))
+def test_incremental_relax_rewards_match_full_apsp(n, seed):
+    """Property (satellite of the rollout engine): rewards computed from
+    O(N^2) incremental relaxation equal full-APSP rewards on random
+    edge-insert sequences — the substitution the engine makes."""
+    rng = np.random.default_rng(seed)
+    w = make_latency("uniform", n, seed=seed % 97)
+    dist = np.full((n, n), float(INF), np.float32)
+    np.fill_diagonal(dist, 0.0)
+    dist = jnp.asarray(dist)
+    adj_w = np.full((n, n), float(INF), np.float32)
+    np.fill_diagonal(adj_w, 0.0)
+    prev_inc = prev_full = 0.0
+    for _ in range(2 * n):
+        u, v = (int(x) for x in rng.choice(n, size=2, replace=False))
+        wuv = np.float32(w[u, v])
+        adj_w[u, v] = adj_w[v, u] = min(adj_w[u, v], float(wuv))
+        dist = relax_edge_update(dist, u, v, wuv)
+        d_inc = float(largest_cc_diameter(dist))
+        d_full = float(diameter(jnp.asarray(adj_w)))
+        scale = max(1.0, d_full)
+        assert abs(d_inc - d_full) <= 1e-3 * scale, (d_inc, d_full)
+        r_inc, r_full = prev_inc - d_inc, prev_full - d_full
+        assert abs(r_inc - r_full) <= 2e-3 * scale, (r_inc, r_full)
+        prev_inc, prev_full = d_inc, d_full
+    # final state cross-check against the scipy oracle
+    assert d_inc == pytest.approx(diameter_scipy(adj_w), rel=1e-3)
+
+
+def test_host_device_rollout_trajectory_parity():
+    """Acceptance: device-vs-host rollouts produce identical rings and
+    matching rewards at fixed seeds (eps-greedy randomness exercised)."""
+    cfg = DQNConfig(n=9, k_rings=2)
+    params = init_qparams(jax.random.PRNGKey(1), cfg.p, cfg.h)
+    w = make_latency("uniform", 9, seed=5)
+    plan = rollout.make_plan(np.random.default_rng(3), 1, cfg.k_rings, cfg.n)
+    _, _, d_h, _, perms_h, rw_h = _run_episode(
+        params, cfg, w, 0.4, plan, 0, buffer=None, train=False)
+    actions, rw_d, d_d = rollout.rollout_episodes(
+        params, jnp.asarray(w, jnp.float32)[None], jnp.asarray(plan.starts),
+        jnp.asarray(plan.eps_u), jnp.asarray(plan.choice_u), 0.4, cfg.alpha,
+        k_rings=cfg.k_rings, n_rounds=cfg.n_rounds)
+    perms_d = rollout.perms_from_actions(plan.starts, np.asarray(actions),
+                                         cfg.k_rings, cfg.n)[0]
+    assert all(np.array_equal(a, b) for a, b in zip(perms_h, perms_d))
+    assert np.allclose(rw_h, np.asarray(rw_d)[:, 0], atol=1e-4)
+    assert abs(d_h - float(np.asarray(d_d)[0])) <= 1e-3 * max(1.0, d_h)
+
+
+def test_construct_ring_dqn_mode_parity():
+    """The public facade consumes its rng identically in both modes."""
+    cfg = DQNConfig(n=10, k_rings=2)
+    params = init_qparams(jax.random.PRNGKey(0), cfg.p, cfg.h)
+    w = make_latency("gaussian", 10, seed=2)
+    perms_h, d_h = construct_ring_dqn(
+        params, dataclasses.replace(cfg, rollout="host"), w,
+        np.random.default_rng(11))
+    perms_d, d_d = construct_ring_dqn(params, cfg, w,
+                                      np.random.default_rng(11))
+    assert all(np.array_equal(a, b) for a, b in zip(perms_h, perms_d))
+    assert abs(d_h - d_d) <= 1e-3 * max(1.0, d_h)
+
+
+def test_dgro_overlay_batched_matches_host():
+    """dgro_overlay's n_starts constructions collapse into one vmapped
+    rollout call; the winner must match the sequential host loop."""
+    cfg = DQNConfig(n=8, k_rings=2)
+    params = init_qparams(jax.random.PRNGKey(4), cfg.p, cfg.h)
+    w = make_latency("uniform", 8, seed=9)
+    ov_d = dgro_overlay(params, cfg, w, n_starts=4, seed=13)
+    ov_h = dgro_overlay(params, dataclasses.replace(cfg, rollout="host"), w,
+                        n_starts=4, seed=13)
+    assert all(np.array_equal(a, b) for a, b in zip(ov_d.rings, ov_h.rings))
+    assert ov_d.diameter() == ov_h.diameter()
 
 
 def test_dqn_training_improves_over_random():
@@ -51,3 +180,15 @@ def test_dqn_training_improves_over_random():
     assert d_dqn <= d_rand * 1.15, (d_dqn, d_rand)
     # learning signal exists: test diameter not increasing overall
     assert min(log.test_diam) <= log.test_diam[0] + 1e-6
+
+
+def test_train_dqn_host_mode_smoke():
+    """The host debug path stays alive: it trains, logs and constructs."""
+    cfg = DQNConfig(n=8, k_rings=1, epochs=4, eps_decay=2, batch_size=8,
+                    buffer_capacity=200, seed=3, rollout="host")
+    params, log = train_dqn(cfg, eval_every=2, eval_graphs=2)
+    assert len(log.epochs) >= 2
+    assert all(np.isfinite(log.test_diam))
+    _, d = construct_ring_dqn(params, cfg, make_latency("uniform", 8, seed=1),
+                              np.random.default_rng(0))
+    assert np.isfinite(d) and d > 0
