@@ -53,14 +53,16 @@ def main() -> None:
         ("fig17-bitnode", lambda: fig13_kring_compare.run(
             "bitnode", (30, 60) if fast else (50, 100, 200),
             ga_budget=100 if fast else 300)),
+        # the >=5x batched-vs-host construction gate always runs at N=256,
+        # M=8, and the <=1.05 diameter-parity gate on uniform+bitnode; --fast
+        # only shrinks the M sweep and the seed fleet
         ("fig14", lambda: fig14_parallel.run(
-            "uniform", 64 if fast else 256)),
+            seeds=(0, 1) if fast else (0, 1, 2),
+            partitions=(1, 8, 32) if fast else (1, 2, 4, 8, 16, 32))),
         ("fig15-batcheval", lambda: fig15_batcheval.run(
             bs=(1, 8, 64) if fast else (1, 8, 64, 256),
             ns=(32, 64) if fast else (32, 64, 128, 256),
             scipy_cap=16 if fast else 64)),
-        ("fig18-bitnode", lambda: fig14_parallel.run(
-            "bitnode", 64 if fast else 256)),
         # the >=5x incremental-vs-full gate always runs at N=128; --fast
         # only shrinks the op stream and the trajectory fleets
         ("fig16-churn", lambda: fig16_churn.run(

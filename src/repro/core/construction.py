@@ -10,7 +10,12 @@ unions of K such rings.  Constructors:
 * ``greedy_ring``    — Algorithm 1 with an arbitrary score function; the DQN
                        plugs its Q-function in here (score = Q(S_t, u)).
 * ``nearest_ring_jax`` — jit-able nearest-neighbour constructor (fori_loop),
-                       used by the shard_map parallel builder (§VI).
+                       used by the parallel builders (§VI).
+* ``nearest_rings_batched`` — the same constructor vmapped over an
+                       (M, P, P) stack of latency blocks: the device-batched
+                       parallel engine builds every partition's segment in
+                       ONE jit'd call (INF-padded blocks keep pad nodes
+                       unreachable until the real nodes are exhausted).
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ __all__ = [
     "nearest_ring",
     "greedy_ring",
     "nearest_ring_jax",
+    "nearest_rings_batched",
     "k_rings",
 ]
 
@@ -86,6 +92,21 @@ def nearest_ring_jax(w: jnp.ndarray, start: jnp.ndarray) -> jnp.ndarray:
     visited0 = jnp.zeros((n,), bool).at[start].set(True)
     perm, _, _ = jax.lax.fori_loop(1, n, body, (perm0, visited0, start))
     return perm
+
+
+@jax.jit
+def nearest_rings_batched(blocks: jnp.ndarray,
+                          starts: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-neighbour rings for an (M, P, P) latency-block stack — all M
+    partitions in one jit'd vmap (the device-batched parallel engine, §VI).
+
+    Blocks holding fewer than P real nodes pad the extra rows/cols with a
+    large-but-finite sentinel (``diameter.INF``): every real unvisited node
+    scores below the sentinel, so the greedy argmin exhausts the real nodes
+    first and ``perm[:size]`` is exactly the block's own ring order.
+    Returns (M, P) int32 permutations of each padded block.
+    """
+    return jax.vmap(nearest_ring_jax)(blocks, starts)
 
 
 def k_rings(

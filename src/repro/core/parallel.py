@@ -1,22 +1,49 @@
 """Parallel ring construction (paper §VI, Algorithm 4).
 
-N nodes are strided into M partitions (paper Fig. 14: "a random ring is
+N nodes are strided into M partitions (§VI / Alg. 4: "a random ring is
 segmented into M partitions using a same stride, each partition's starting
-node determined by a consistent hash").  Each partition orders its own nodes
-concurrently (nearest-neighbour or DQN), then segments are stitched: the
-last node of partition i connects to the first node of partition i+1.
+node determined by a consistent hash" — Fig. 14 is the *benchmark* of this
+scheme, not its definition).  Each partition orders its own nodes
+concurrently, then the segments are stitched into one ring.
 
-Two implementations, cross-validated in tests:
-  * ``parallel_ring``      — host (numpy) reference, trivially parallel.
-  * ``parallel_ring_shmap``— shard_map over a ``partitions`` mesh axis; each
-    device builds one partition with the jit'd nearest-neighbour constructor
-    and the stitch is expressed with collective semantics (the per-partition
-    perm is all-gathered and concatenated — the ring-closure edges are
-    implied by segment order, matching Alg. 4 line 14).
+The partition build is device-batched: the M strided partitions (sizes
+``ceil(N/M)`` or ``floor(N/M)`` — any ``1 <= M``, no ``N % M`` restriction;
+``M > N`` just leaves trailing partitions empty) are padded to a common
+block size P = ``ceil(N/M)`` and ALL segments are constructed in ONE jit'd
+device call over the (M, P, P) latency-block stack.  Constructors are
+pluggable:
+
+* ``"nearest"`` — vmapped :func:`construction.nearest_rings_batched`
+  (INF-padded blocks keep pad nodes unreachable until the real nodes are
+  exhausted, so ``perm[:size]`` is each block's own ring order);
+* ``"dqn"``     — the vectorized DQN rollout engine
+  (:func:`repro.core.rollout.rollout_episodes`) with partitions as the
+  environment batch and per-env ``sizes`` masking the padding, so
+  DQN-quality segments come at nearest-neighbour wall clock.
+
+Stitching: ``"naive"`` connects segment i's tail to segment i+1's head
+(Alg. 4 line 14); ``"scored"`` additionally tries rotations/reflections of
+every segment — each candidate keeps the segment's own ring edges and only
+moves which edge the inter-partition closure breaks — and scores ALL
+candidate merged rings in ONE batched ``batcheval.diameters`` call,
+keeping the best (the long-jump/clustering trade-off of ring augmentation:
+naive tail-to-head closures leave diameter on the table).
+
+Three engines, cross-validated in tests (all consume the same
+:class:`PartitionPlan` host randomness, so a fixed seed produces identical
+segments on every path):
+
+* :func:`parallel_ring` / :func:`parallel_ring_scored` — the device-batched
+  engine above (single device, one call for all partitions);
+* :func:`parallel_ring_host`  — per-partition numpy loop, the pre-batched
+  reference implementation and the fig14 speedup baseline;
+* :func:`parallel_ring_shmap` — ``shard_map`` over a ``partitions`` mesh
+  axis: one padded block per device for the multi-device path.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,103 +53,439 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from . import batcheval
-from .construction import nearest_ring, nearest_ring_jax
-from .diameter import adjacency_from_rings
+from .construction import nearest_ring, nearest_ring_jax, nearest_rings_batched
+from .diameter import INF, adjacency_from_rings
 
-__all__ = ["partition_nodes", "parallel_ring", "parallel_ring_scored",
-           "parallel_overlay", "score_partition_blocks",
-           "parallel_ring_shmap"]
+__all__ = ["partition_nodes", "PartitionPlan", "plan_partitions",
+           "SegmentDQNConfig", "stitch_segments", "score_partition_blocks",
+           "parallel_ring", "parallel_rings", "parallel_ring_scored",
+           "parallel_ring_host", "parallel_overlay", "parallel_ring_shmap"]
 
+
+# ---------------------------------------------------------------------------
+# partition planning (shared host randomness for every engine)
+# ---------------------------------------------------------------------------
 
 def partition_nodes(n: int, m: int, rng: np.random.Generator) -> List[np.ndarray]:
-    """Stride a random base ring into M partitions (paper §VII-C.4)."""
+    """Stride a random base ring into M partitions (paper §VI / Alg. 4)."""
     base = rng.permutation(n)
     return [base[i::m] for i in range(m)]
 
 
-def parallel_ring(w: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
-    """Algorithm 4 on the host: per-partition nearest-neighbour order, then
-    stitch segments end-to-end.  Returns the merged ring permutation."""
-    return parallel_ring_scored(w, m, seed=seed)[0]
+class PartitionPlan(NamedTuple):
+    """Everything random about one Alg. 4 build, drawn up front on the host.
+
+    ``parts``: per-partition node ids (trailing partitions are empty when
+    M > N); ``sizes``: (M,) partition sizes; ``starts``: (M,) local
+    consistent-hash start indices (0 for empty partitions, which draw no
+    randomness).  Every engine (host loop, device batch, shard_map) consumes
+    the same plan, so a fixed seed builds identical segments on all paths.
+    """
+
+    parts: List[np.ndarray]
+    sizes: np.ndarray
+    starts: np.ndarray
+
+    @property
+    def p_max(self) -> int:
+        """Padded block size P = ceil(N/M) (1 when every partition is empty)."""
+        return max(1, int(self.sizes.max()))
+
+
+def plan_partitions(n: int, m: int, rng: np.random.Generator) -> PartitionPlan:
+    if m < 1:
+        raise ValueError(f"need at least one partition, got m={m}")
+    parts = partition_nodes(n, m, rng)
+    sizes = np.array([len(p) for p in parts], dtype=np.int32)
+    starts = np.array([int(rng.integers(s)) if s else 0 for s in sizes],
+                      dtype=np.int32)
+    return PartitionPlan(parts, sizes, starts)
+
+
+def _padded_blocks(w: np.ndarray, plan: PartitionPlan,
+                   fill: float) -> np.ndarray:
+    """(M, P, P) stack of per-partition latency blocks, padded with ``fill``
+    (host assembly — the shard_map path ships one block per device)."""
+    p = plan.p_max
+    out = np.full((len(plan.parts), p, p), fill, dtype=np.float32)
+    for i, nodes in enumerate(plan.parts):
+        s = len(nodes)
+        if s:
+            out[i, :s, :s] = w[np.ix_(nodes, nodes)]
+    return out
+
+
+def _plans_index(plans: Sequence[PartitionPlan], p: int) -> np.ndarray:
+    """(B*M, P) node-id rows for every partition of every plan, -1 padded —
+    the device gathers the latency blocks itself (see `_gather_blocks`), so
+    the host never materializes B*M (P, P) copies of w's entries."""
+    rows = np.full((sum(len(pl.parts) for pl in plans), p), -1, dtype=np.int32)
+    r = 0
+    for plan in plans:
+        for nodes in plan.parts:
+            rows[r, :len(nodes)] = nodes
+            r += 1
+    return rows
+
+
+@jax.jit
+def _gather_blocks(w: jnp.ndarray, idx: jnp.ndarray, fill) -> jnp.ndarray:
+    """(B*M, P) padded node-id rows -> (B*M, P, P) latency blocks on device."""
+
+    def one(idx_i):
+        pad = idx_i < 0
+        ii = jnp.where(pad, 0, idx_i)
+        block = w[ii[:, None], ii[None, :]]
+        return jnp.where(pad[:, None] | pad[None, :], fill, block)
+
+    return jax.vmap(one)(idx)
+
+
+@jax.jit
+def _gather_nearest_perms(w: jnp.ndarray, idx: jnp.ndarray,
+                          starts: jnp.ndarray) -> jnp.ndarray:
+    """Fused gather + nearest-ring build for every padded block row: ONE
+    device call constructs all B*M partition segments of B ring builds."""
+    return nearest_rings_batched(_gather_blocks(w, idx, INF), starts)
+
+
+def _extract_segments(plan: PartitionPlan, perms: np.ndarray) -> List[np.ndarray]:
+    """Local padded-block perms -> global node-id segments (empties kept)."""
+    return [nodes[perms[i, :len(nodes)]] for i, nodes in enumerate(plan.parts)]
+
+
+# ---------------------------------------------------------------------------
+# per-partition constructors (one device call for ALL partitions of ALL builds)
+# ---------------------------------------------------------------------------
+
+def _nearest_perms_fused(w: np.ndarray, plans: Sequence[PartitionPlan]):
+    """One fused gather+build device call for every partition of every
+    plan.  Returns ``(idx (B*M, P), perms (B*M, P))`` in plan order."""
+    p = max(pl.p_max for pl in plans)
+    idx = _plans_index(plans, p)
+    starts = np.concatenate([pl.starts for pl in plans])
+    perms = np.asarray(_gather_nearest_perms(
+        jnp.asarray(w), jnp.asarray(idx), jnp.asarray(starts)))
+    return idx, perms
+
+
+def _segments_nearest_many(w: np.ndarray,
+                           plans: Sequence[PartitionPlan]) -> List[List[np.ndarray]]:
+    _, perms = _nearest_perms_fused(w, plans)
+    out, r = [], 0
+    for plan in plans:
+        out.append(_extract_segments(plan, perms[r:r + len(plan.parts)]))
+        r += len(plan.parts)
+    return out
+
+
+def _segments_nearest(w: np.ndarray, plan: PartitionPlan) -> List[np.ndarray]:
+    return _segments_nearest_many(w, [plan])[0]
+
+
+def _nearest_merged_naive(w: np.ndarray,
+                          plans: Sequence[PartitionPlan]) -> List[np.ndarray]:
+    """Fast path for nearest + naive stitch: one fused device build, then
+    ONE vectorized gather/mask turns all B*M padded perms into the B merged
+    rings (no per-partition host loop).  Bit-identical to extracting the
+    segments and concatenating them in partition order."""
+    idx, perms = _nearest_perms_fused(w, plans)
+    sizes = np.concatenate([pl.sizes for pl in plans])
+    gathered = np.take_along_axis(idx, perms, axis=1)     # global node ids
+    real = np.arange(idx.shape[1], dtype=np.int32)[None, :] < sizes[:, None]
+    return np.split(gathered[real].astype(np.intp), len(plans))
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentDQNConfig:
+    """Training recipe for the ``"dqn"`` per-partition constructor: a small
+    deep-Q ring builder trained on graphs of the padded block size, then
+    rolled out greedily over all M partition blocks in one vmapped call.
+
+    ``train_seed`` seeds the training run only — build seeds randomize the
+    partition plans, not the Q-network, so repeated builds at the same
+    block size reuse one cached training run.
+    """
+    epochs: int = 40
+    dist: str = "uniform"
+    alpha: float = 0.1
+    n_envs: int = 4
+    train_seed: int = 0
+
+
+# trained segment-constructor params, keyed by (block size, recipe) — an
+# M-sweep (fig14) or repeated builder calls reuse one training run; FIFO
+# eviction keeps a handful of (p, recipe) combinations resident
+_SEGMENT_PARAMS_CACHE: dict = {}
+_SEGMENT_PARAMS_CACHE_MAX = 8
+
+
+def _segment_qparams(p: int, dqn: SegmentDQNConfig):
+    from .qlearning import DQNConfig, train_dqn   # jax-heavy, import lazily
+
+    key = (p, dqn)
+    if key not in _SEGMENT_PARAMS_CACHE:
+        dcfg = DQNConfig(n=p, k_rings=1, epochs=dqn.epochs,
+                         eps_decay=max(dqn.epochs // 2, 1), dist=dqn.dist,
+                         alpha=dqn.alpha, seed=dqn.train_seed,
+                         n_envs=dqn.n_envs)
+        params, _ = train_dqn(dcfg, eval_every=max(dqn.epochs, 1),
+                              eval_graphs=1)
+        while len(_SEGMENT_PARAMS_CACHE) >= _SEGMENT_PARAMS_CACHE_MAX:
+            _SEGMENT_PARAMS_CACHE.pop(next(iter(_SEGMENT_PARAMS_CACHE)))
+        _SEGMENT_PARAMS_CACHE[key] = (params, dcfg)
+    return _SEGMENT_PARAMS_CACHE[key]
+
+
+def _segments_dqn_many(w: np.ndarray, plans: Sequence[PartitionPlan],
+                       dqn: SegmentDQNConfig) -> List[List[np.ndarray]]:
+    """DQN-ordered segments: all B*M partitions ARE the rollout environment
+    batch of ONE vmapped episode call.
+
+    Pad latencies are 0 (not INF — the Q embedding consumes ``w``) and pad
+    nodes are excluded via the engine's per-env ``sizes`` masking; the
+    greedy (eps=0) episode needs no plan uniforms.
+    """
+    from . import rollout   # jax-heavy, import lazily
+
+    p = max(pl.p_max for pl in plans)
+    params, dcfg = _segment_qparams(p, dqn)
+    idx = _plans_index(plans, p)
+    starts = np.concatenate([pl.starts for pl in plans])
+    sizes = np.concatenate([pl.sizes for pl in plans])
+    blocks = _gather_blocks(jnp.asarray(w), jnp.asarray(idx), 0.0)
+    zeros = jnp.zeros((p, len(starts)), jnp.float32)     # T = k_rings * P = P
+    actions, _, _ = rollout.rollout_episodes(
+        params, blocks, jnp.asarray(starts[:, None]), zeros, zeros,
+        0.0, dqn.alpha, k_rings=1, n_rounds=dcfg.n_rounds,
+        sizes=jnp.asarray(sizes))
+    actions = np.asarray(actions)                        # (P, B*M)
+    perms = np.empty((len(starts), p), dtype=np.int64)
+    for i, s in enumerate(sizes):
+        if s:
+            perms[i, 0] = starts[i]
+            perms[i, 1:s] = actions[:s - 1, i]           # step s-1 closes
+    out, r = [], 0
+    for plan in plans:
+        out.append(_extract_segments(plan, perms[r:r + len(plan.parts)]))
+        r += len(plan.parts)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stitch refinement
+# ---------------------------------------------------------------------------
+
+def _orient(seg: np.ndarray, rot: int, flip: bool) -> np.ndarray:
+    s = np.roll(seg, -rot)
+    return s[::-1] if flip else s
+
+
+def _greedy_chain(w: np.ndarray, segs: List[np.ndarray],
+                  flip_first: bool) -> np.ndarray:
+    """Chain segments greedily: rotate each so its head is the node nearest
+    the previous segment's tail (rotations keep the segment's ring edges —
+    they only move which edge the closure breaks)."""
+    out = [_orient(segs[0], 0, flip_first)]
+    for seg in segs[1:]:
+        tail = out[-1][-1]
+        out.append(_orient(seg, int(np.argmin(w[tail, seg])), False))
+    return np.concatenate(out)
+
+
+def stitch_segments(w: np.ndarray, segments: Sequence[np.ndarray],
+                    stitch: str = "naive", n_candidates: int = 16,
+                    seed: int = 0) -> np.ndarray:
+    """Merge per-partition segments into one ring permutation.
+
+    ``"naive"``: concatenate in partition order (Alg. 4 line 14 — segment
+    i's tail connects to segment i+1's head, the last back to the first).
+    ``"scored"``: build ``n_candidates`` merges where each segment may be
+    rotated/reflected (every candidate preserves each segment's own ring
+    edges; only the edge broken by the inter-partition closure moves) —
+    the naive merge, two greedy nearest-entry chains, and random
+    orientations — then score ALL of them in ONE batched diameter call and
+    keep the best.  Empty segments are dropped.
+    """
+    if stitch not in ("naive", "scored"):
+        raise ValueError(f"unknown stitch {stitch!r}; options "
+                         f"('naive', 'scored')")
+    segs = [np.asarray(s) for s in segments if len(s)]
+    if not segs:
+        raise ValueError("no non-empty segments to stitch")
+    naive = np.concatenate(segs)
+    if stitch == "naive" or len(segs) == 1:
+        return naive
+    # a child stream distinct from default_rng(seed): the plan already
+    # consumed that exact stream, and correlated draws would tie the
+    # candidate orientations to the base permutation (cf. selection.adapt)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 1]))
+    cands = [naive, _greedy_chain(w, segs, False), _greedy_chain(w, segs, True)]
+    for _ in range(max(0, n_candidates - len(cands))):
+        cands.append(np.concatenate([
+            _orient(s, int(rng.integers(len(s))), bool(rng.integers(2)))
+            for s in segs]))
+    rings = np.stack(cands)
+    scores = batcheval.diameters_of_rings(w, rings[:, None, :])
+    return rings[int(np.argmin(scores))]
 
 
 def score_partition_blocks(w: np.ndarray,
-                           segments: List[np.ndarray]) -> np.ndarray:
-    """Per-partition ring diameters, all M blocks in ONE padded device batch.
+                           segments: Sequence[np.ndarray]) -> np.ndarray:
+    """Per-partition ring diameters, all non-empty blocks in ONE padded
+    device batch (padded nodes are isolated singletons the largest-CC rule
+    ignores).
 
-    Each segment's local ring adjacency (over its own latency block) is
-    padded to the largest partition size and stacked; padded nodes are
-    isolated singletons that the largest-CC rule ignores, so the scores
-    equal each block's own ring diameter.
+    Returns one score per REQUESTED partition — ``NaN`` for empty blocks
+    (M > N leaves trailing partitions empty), so the result always has
+    ``len(segments)`` entries aligned with the input.
     """
+    segments = [np.asarray(s) for s in segments]
+    scores = np.full(len(segments), np.nan, dtype=np.float32)
+    idx = [i for i, s in enumerate(segments) if len(s)]
+    if not idx:
+        return scores
     blocks = []
-    for seg in segments:
+    for i in idx:
+        seg = segments[i]
         sub_w = w[np.ix_(seg, seg)]
         blocks.append(adjacency_from_rings(sub_w, [np.arange(len(seg))]))
-    return batcheval.diameters(batcheval.pad_adjacency_blocks(blocks))
+    scores[idx] = batcheval.diameters(batcheval.pad_adjacency_blocks(blocks))
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# engines
+# ---------------------------------------------------------------------------
+
+def _build_segments_many(w: np.ndarray, plans: Sequence[PartitionPlan],
+                         constructor: str,
+                         dqn: Optional[SegmentDQNConfig]) -> List[List[np.ndarray]]:
+    # blocks of <= 2 nodes have a unique ring order — the DQN adds nothing
+    if constructor == "dqn" and max(pl.p_max for pl in plans) > 2:
+        return _segments_dqn_many(w, plans, dqn or SegmentDQNConfig())
+    if constructor in ("nearest", "dqn"):
+        return _segments_nearest_many(w, plans)
+    raise ValueError(f"unknown constructor {constructor!r}; options "
+                     f"('nearest', 'dqn')")
+
+
+def parallel_rings(w: np.ndarray, m: int, seeds: Sequence[int],
+                   constructor: str = "nearest", stitch: str = "naive",
+                   n_stitch_candidates: int = 16,
+                   dqn: Optional[SegmentDQNConfig] = None) -> List[np.ndarray]:
+    """B independent Algorithm-4 builds in ONE device call.
+
+    All ``len(seeds) * M`` partition segments go through a single fused
+    gather + construct call (the B*M padded blocks are the batch axis), so
+    building a whole K-ring topology — or a fleet of candidate rings —
+    costs one dispatch instead of B.  Returns one merged ring per seed;
+    each build draws its own :class:`PartitionPlan` from its seed, exactly
+    as the single-build entry points do.
+    """
+    if not len(seeds):
+        return []
+    w = np.asarray(w, dtype=np.float32)
+    plans = [plan_partitions(w.shape[0], m, np.random.default_rng(s))
+             for s in seeds]
+    if constructor == "nearest" and stitch == "naive":
+        return _nearest_merged_naive(w, plans)
+    many = _build_segments_many(w, plans, constructor, dqn)
+    return [stitch_segments(w, segs, stitch=stitch,
+                            n_candidates=n_stitch_candidates, seed=int(s))
+            for segs, s in zip(many, seeds)]
 
 
 def parallel_ring_scored(
-        w: np.ndarray, m: int, seed: int = 0,
-        score_blocks: bool = False) -> Tuple[np.ndarray, np.ndarray | None]:
-    """Algorithm 4 + optional per-partition quality signal.
+        w: np.ndarray, m: int, seed: int = 0, score_blocks: bool = False,
+        constructor: str = "nearest", stitch: str = "naive",
+        n_stitch_candidates: int = 16,
+        dqn: Optional[SegmentDQNConfig] = None,
+) -> Tuple[np.ndarray, np.ndarray | None]:
+    """Algorithm 4 on the device-batched engine + optional quality signal.
 
-    Returns (merged ring permutation, per-block ring diameters or None).
-    The block scores — used by the construction monitor and the fig14
-    benchmark — come from one padded batched diameter call rather than M
-    host Dijkstras.
+    Returns (merged ring permutation, per-partition block ring diameters or
+    None).  The block scores — used by the construction monitor and the
+    fig14 benchmark — come from one padded batched diameter call and carry
+    one entry per requested partition (NaN for empty blocks).
     """
+    w = np.asarray(w, dtype=np.float32)
     rng = np.random.default_rng(seed)
-    n = w.shape[0]
-    parts = partition_nodes(n, m, rng)
+    plan = plan_partitions(w.shape[0], m, rng)
+    segments = _build_segments_many(w, [plan], constructor, dqn)[0]
+    ring = stitch_segments(w, segments, stitch=stitch,
+                           n_candidates=n_stitch_candidates, seed=seed)
+    scores = score_partition_blocks(w, segments) if score_blocks else None
+    return ring, scores
+
+
+def parallel_ring(w: np.ndarray, m: int, seed: int = 0,
+                  constructor: str = "nearest",
+                  stitch: str = "naive") -> np.ndarray:
+    """Algorithm 4, device-batched: all M partition segments in one jit'd
+    call, then stitch.  Returns the merged ring permutation."""
+    return parallel_ring_scored(w, m, seed=seed, constructor=constructor,
+                                stitch=stitch)[0]
+
+
+def parallel_ring_host(w: np.ndarray, m: int, seed: int = 0,
+                       stitch: str = "naive") -> np.ndarray:
+    """Algorithm 4 as the pre-batched host reference: a Python loop of
+    per-partition numpy nearest-neighbour builds.  Consumes the same
+    :class:`PartitionPlan` randomness as the batched engine, so segments
+    (and the merged ring) are identical at a fixed seed — the fig14
+    benchmark gates the batched engine's speedup against this loop."""
+    w = np.asarray(w, dtype=np.float32)
+    rng = np.random.default_rng(seed)
+    plan = plan_partitions(w.shape[0], m, rng)
     segments = []
-    for nodes in parts:
+    for nodes, start in zip(plan.parts, plan.starts):
         if len(nodes) == 0:
+            segments.append(nodes)
             continue
         sub_w = w[np.ix_(nodes, nodes)]
-        start = int(rng.integers(len(nodes)))          # consistent-hash start
-        local = nearest_ring(sub_w, start=start)
-        segments.append(nodes[local])
-    scores = score_partition_blocks(w, segments) if score_blocks else None
-    return np.concatenate(segments), scores
+        segments.append(nodes[nearest_ring(sub_w, start=int(start))])
+    return stitch_segments(w, segments, stitch=stitch, seed=seed)
 
 
 def parallel_overlay(w: np.ndarray, m: int, seed: int = 0,
-                     score_blocks: bool = False):
+                     score_blocks: bool = False,
+                     constructor: str = "nearest", stitch: str = "naive",
+                     dqn: Optional[SegmentDQNConfig] = None):
     """Algorithm 4 as an :class:`repro.overlay.Overlay`.
 
     Returns ``(overlay, block_scores)`` where the overlay holds the merged
     ring and ``block_scores`` the per-partition ring diameters (``None``
-    unless ``score_blocks``).
+    unless ``score_blocks``; NaN entries mark empty partitions).
     """
     from repro.overlay import Overlay
 
-    perm, scores = parallel_ring_scored(w, m, seed=seed,
-                                        score_blocks=score_blocks)
+    perm, scores = parallel_ring_scored(
+        w, m, seed=seed, score_blocks=score_blocks, constructor=constructor,
+        stitch=stitch, dqn=dqn)
     return Overlay.from_rings(w, [perm], policy="parallel"), scores
 
 
 def parallel_ring_shmap(w: np.ndarray, mesh: Mesh, axis: str = "partitions",
-                        seed: int = 0) -> np.ndarray:
-    """Algorithm 4 with shard_map: one partition per device along ``axis``.
+                        seed: int = 0, stitch: str = "naive") -> np.ndarray:
+    """Algorithm 4 with shard_map: one padded partition block per device
+    along ``axis`` — the multi-device path of the batched engine.
 
-    The node->partition assignment is strided over a random base ring; each
-    shard runs the jit'd nearest-neighbour constructor over its local block
-    of the latency matrix, then the merged ring is the concatenation of
-    per-partition segments (ring closure per Alg. 4 line 14).
+    Any ``1 <= M`` works: partitions are padded to P = ceil(N/M) exactly
+    like the single-device batch (INF padding; non-divisible N and M > N
+    just shrink or empty the trailing blocks), and the same
+    :class:`PartitionPlan` randomness keeps the result bit-identical to
+    :func:`parallel_ring` / :func:`parallel_ring_host` at a fixed seed.
     """
     m = mesh.shape[axis]
-    n = w.shape[0]
-    assert n % m == 0, f"N={n} must divide into {m} partitions"
+    w = np.asarray(w, dtype=np.float32)
     rng = np.random.default_rng(seed)
-    base = rng.permutation(n)
-    nodes_by_part = np.stack([base[i::m] for i in range(m)])     # (m, n/m)
-    # per-partition local latency blocks, gathered host-side once
-    blocks = np.stack([w[np.ix_(p, p)] for p in nodes_by_part])  # (m, n/m, n/m)
-    starts = rng.integers(0, n // m, size=(m, 1)).astype(np.int32)
+    plan = plan_partitions(w.shape[0], m, rng)
+    blocks = _padded_blocks(w, plan, float(INF))
+    starts = plan.starts[:, None].astype(np.int32)
 
     def build_one(block, start):
-        # block: (1, n/m, n/m) local shard; start: (1, 1)
+        # block: (1, P, P) local shard; start: (1, 1)
         perm = nearest_ring_jax(block[0], start[0, 0])
         return perm[None]
 
@@ -131,6 +494,6 @@ def parallel_ring_shmap(w: np.ndarray, mesh: Mesh, axis: str = "partitions",
         in_specs=(P(axis, None, None), P(axis, None)),
         out_specs=P(axis, None),
     )
-    local_perms = np.asarray(jax.jit(fn)(jnp.asarray(blocks), jnp.asarray(starts)))
-    segments = [nodes_by_part[i][local_perms[i]] for i in range(m)]
-    return np.concatenate(segments)
+    perms = np.asarray(jax.jit(fn)(jnp.asarray(blocks), jnp.asarray(starts)))
+    segments = _extract_segments(plan, perms)
+    return stitch_segments(w, segments, stitch=stitch, seed=seed)

@@ -244,10 +244,12 @@ def _step_masks(k_rings: int, n: int):
             jnp.asarray(t // n == k_rings - 1))
 
 
-def _reset_ring(ring_start, start_t, visited, v, cur_start):
+def _reset_ring(ring_start, start_t, visited, v, cur_start, pad_mask=None):
     n_envs, n = visited.shape
     onehot = jnp.zeros((n_envs, n), bool).at[
         jnp.arange(n_envs), start_t].set(True)
+    if pad_mask is not None:     # padded envs: pad nodes are never selectable
+        onehot = onehot | pad_mask
     visited = jnp.where(ring_start, onehot, visited)
     v = jnp.where(ring_start, start_t, v)
     cur_start = jnp.where(ring_start, start_t, cur_start)
@@ -262,34 +264,56 @@ def _reset_ring(ring_start, start_t, visited, v, cur_start):
 def rollout_episodes(params: QParams, w_batch: jnp.ndarray,
                      starts: jnp.ndarray, eps_u: jnp.ndarray,
                      choice_u: jnp.ndarray, eps, alpha, *,
-                     k_rings: int, n_rounds: int = 3):
+                     k_rings: int, n_rounds: int = 3, sizes=None):
     """Build K rings in each of E environments — ONE device call.
 
     ``w_batch``: (E, N, N) latency stack; ``starts``/``eps_u``/``choice_u``
     from :func:`make_plan`.  Returns ``(actions (T, E), rewards (T, E),
     final_diameter (E,))`` with T = K * N scan steps.
+
+    ``sizes`` (optional, (E,) int) marks env e's graph as occupying only
+    nodes ``[0, sizes[e])`` of the padded N-node block (the parallel
+    construction engine batches unequal partitions this way): pad nodes are
+    masked visited at every ring reset, the closing edge fires per-env at
+    step ``sizes[e] - 1``, and later steps of that ring are no-ops (state
+    frozen, reward 0).  ``sizes=None`` (the default) is exactly the
+    full-size behavior; env starts must satisfy ``starts[e] < sizes[e]``.
     """
     n_envs, n = w_batch.shape[0], w_batch.shape[1]
-    ring_start, closing, _ = _step_masks(k_rings, n)
+    ring_start, _, _ = _step_masks(k_rings, n)
+    rt = jnp.asarray(np.tile(np.arange(n, dtype=np.int32), k_rings))  # (T,)
     start_t = jnp.repeat(starts.T, n, axis=0)            # (T, E)
     eps = jnp.float32(eps)
     alpha = jnp.float32(alpha)
+    sizes = (jnp.full((n_envs,), n, jnp.int32) if sizes is None
+             else jnp.asarray(sizes, jnp.int32))
+    pad_mask = jnp.arange(n, dtype=jnp.int32)[None, :] >= sizes[:, None]
 
     def step(carry, xs):
         dist, adj, visited, v, cur_start, prev_d = carry
-        rs, cl, st, eu, cu = xs
-        visited, v, cur_start = _reset_ring(rs, st, visited, v, cur_start)
+        rs, rt_t, st, eu, cu = xs
+        visited, v, cur_start = _reset_ring(rs, st, visited, v, cur_start,
+                                            pad_mask)
+        cl = rt_t == sizes - 1        # (E,) per-env ring-closing step
+        active = rt_t < sizes         # (E,) padded envs idle past their size
         a = _select_actions(params, w_batch, adj, visited, v, cur_start,
                             eu, cu, eps, cl, n_rounds)
-        dist, adj, new_d, reward, _ = _apply_edge(
+        dist2, adj2, new_d, reward, _ = _apply_edge(
             w_batch, dist, adj, v, a, prev_d, alpha)
-        visited = visited.at[jnp.arange(n_envs), a].set(True)
-        v = jnp.where(cl, v, a)
+        act3 = active[:, None, None]
+        dist = jnp.where(act3, dist2, dist)
+        adj = jnp.where(act3, adj2, adj)
+        new_d = jnp.where(active, new_d, prev_d)
+        reward = jnp.where(active, reward, 0.0)
+        visited = jnp.where(active[:, None],
+                            visited.at[jnp.arange(n_envs), a].set(True),
+                            visited)
+        v = jnp.where(cl | ~active, v, a)
         return (dist, adj, visited, v, cur_start, new_d), (a, reward)
 
     carry0 = _episode_init(n_envs, n)
     (dist, *_rest, prev_d), (actions, rewards) = jax.lax.scan(
-        step, carry0, (ring_start, closing, start_t, eps_u, choice_u))
+        step, carry0, (ring_start, rt, start_t, eps_u, choice_u))
     return actions, rewards, prev_d
 
 

@@ -70,12 +70,21 @@ def measure_latency_stats(
     adj: np.ndarray,
     k_samples: int | None = None,
     gossip_rounds: int = 30,
-    seed: int = 0,
+    seed: int | np.random.SeedSequence = 0,
 ) -> LatencyStats:
-    """Algorithm 3: per-node sampling + gossip aggregation."""
+    """Algorithm 3: per-node sampling + gossip aggregation.
+
+    Sample sizes are clamped to the available populations: a node has at
+    most n-1 global peers (and len(neigh) neighbours), so ``k`` larger than
+    that — the default k at n=2, or an explicit ``k_samples`` on a small or
+    churned-down network — measures every peer instead of raising.
+    """
     rng = np.random.default_rng(seed)
     n = w.shape[0]
+    if n < 2:         # a lone node has no peers to sample
+        return LatencyStats(0.0, 0.0, 0.0, gossip_rounds)
     k = k_samples or max(2, int(np.ceil(np.log2(n))))
+    k_global = min(k, n - 1)
     per_node = np.zeros((n, 3), np.float64)
     neigh_lists = neighbour_lists(adj)
     for u in range(n):
@@ -83,7 +92,8 @@ def measure_latency_stats(
         if len(neigh) == 0:
             neigh = np.array([(u + 1) % n])
         r = rng.choice(neigh, size=min(k, len(neigh)), replace=False)
-        g = rng.choice(np.delete(np.arange(n), u), size=k, replace=False)
+        g = rng.choice(np.delete(np.arange(n), u), size=k_global,
+                      replace=False)
         per_node[u, 0] = w[u, r].mean()       # L_local
         per_node[u, 1] = w[u, g].mean()       # L_global
         per_node[u, 2] = w[u, g].min()        # L_min
@@ -135,15 +145,21 @@ def adapt(
     candidate is added via :meth:`Overlay.add_ring`.  Returns
     (new overlay, ring kind added, rho); ``kind == "keep"`` returns the
     input overlay unchanged.
+
+    The measurement and candidate-proposal streams are independent child
+    sequences spawned from ``seed`` (``np.random.SeedSequence.spawn``) —
+    seeding both from the same integer would correlate the latency samples
+    with the proposed rings while still being deterministic per seed.
     """
     w, adj = overlay.w, overlay.adjacency
     n = w.shape[0]
-    stats = measure_latency_stats(w, adj, seed=seed)
+    meas_seed, cand_seed = np.random.SeedSequence(seed).spawn(2)
+    stats = measure_latency_stats(w, adj, seed=meas_seed)
     rho = clustering_ratio(stats)
     kind = select_ring_kind(rho, eps)
     if kind == "keep":
         return overlay, kind, rho
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(cand_seed)
     if kind == "random":
         rings = [random_ring(rng, n) for _ in range(n_candidates)]
     else:

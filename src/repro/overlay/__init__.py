@@ -29,7 +29,8 @@ builder               paper section
 ``"ga"``              §VII-A.2 genetic-algorithm K-ring search
 ``"nearest"``         §V "shortest ring": greedy nearest-available
 ``"random"``          §IV-B random K-ring (the paper's normalizer)
-``"parallel"``        §VI Alg. 4 partitioned construction (M segments)
+``"parallel"``        §VI Alg. 4 partitioned construction (M segments, one
+                      device-batched build; constructor/stitch knobs)
 ====================  =====================================================
 
 New policies register with ``@overlay.register("name", config=Cfg)`` and are

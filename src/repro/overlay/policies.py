@@ -250,18 +250,33 @@ def _build_ga(w: np.ndarray, cfg: GAConfig,
 
 @dataclasses.dataclass(frozen=True)
 class ParallelConfig:
-    """Algorithm 4: one ring built by M concurrent partitions (stitched
-    segments), plus ``extra_random`` whole-fleet random rings."""
+    """Algorithm 4 on the device-batched engine: one ring built by M
+    concurrent partitions (all segments in one jit'd call), plus
+    ``extra_random`` whole-fleet random rings.
+
+    ``constructor`` picks the per-partition builder: ``"nearest"`` (vmapped
+    greedy nearest-neighbour) or ``"dqn"`` (the vectorized rollout engine
+    with partitions as the environment batch; ``dqn_epochs`` sizes its
+    training run).  ``stitch`` picks the segment merge: ``"naive"``
+    (tail-to-head, Alg. 4 line 14) or ``"scored"`` (segment
+    rotations/reflections scored in one batched diameter call).
+    """
     m: int = 4
     extra_random: int = 0
+    constructor: str = "nearest"
+    stitch: str = "scored"
+    dqn_epochs: int = 40
 
 
 @register("parallel", config=ParallelConfig)
 def _build_parallel(w: np.ndarray, cfg: ParallelConfig,
                     rng: np.random.Generator) -> Overlay:
-    from repro.core.parallel import parallel_overlay   # jax.sharding is heavy
+    from repro.core.parallel import (SegmentDQNConfig,  # jax.sharding is heavy
+                                     parallel_overlay)
 
-    ov, _ = parallel_overlay(w, cfg.m, seed=int(rng.integers(2**31)))
+    ov, _ = parallel_overlay(w, cfg.m, seed=int(rng.integers(2**31)),
+                             constructor=cfg.constructor, stitch=cfg.stitch,
+                             dqn=SegmentDQNConfig(epochs=cfg.dqn_epochs))
     for _ in range(cfg.extra_random):
         ov = ov.add_ring(random_ring(rng, w.shape[0]))
     return ov

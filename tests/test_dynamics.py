@@ -266,6 +266,21 @@ def test_plan_rescale_from_engine_excludes_dead_and_stragglers():
     assert pods * data * model == len(plan.hosts) and model == 2
 
 
+def test_dgro_self_repair_survives_shrinking_below_sample_size():
+    """Regression: a network churning down to a handful of nodes used to
+    crash DGRO's Algorithm-3 self-repair inside measure_latency_stats
+    (global sample of k > n-1 without replacement).  A pure-leave trace
+    shrinking 12 -> 4 with adapt_every=1 must replay to completion."""
+    events = [Event(time=1_000.0 * (i + 1), kind="leave", node=i)
+              for i in range(8)]
+    trace = Trace(n0=12, capacity=12, dist="uniform", seed=5,
+                  events=events, name="shrink")
+    eng = ChurnEngine(trace, DGROPolicy(adapt_every=1), seed=1)
+    res = eng.run()
+    assert eng.inc.n_live == 4
+    assert np.isfinite(res.final_diameter)
+
+
 # ---------------------------------------------------------------------------
 # input validation (satellite)
 # ---------------------------------------------------------------------------

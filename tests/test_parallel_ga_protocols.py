@@ -10,7 +10,11 @@ import pytest
 from repro import overlay
 from repro.core.diameter import diameter_scipy
 from repro.core.ga import GAConfig, evolve, ga_search, random_search
-from repro.core.parallel import parallel_overlay, parallel_ring, partition_nodes
+from repro.core.parallel import (SegmentDQNConfig, parallel_overlay,
+                                 parallel_ring, parallel_ring_host,
+                                 parallel_ring_scored, parallel_rings,
+                                 partition_nodes, score_partition_blocks,
+                                 stitch_segments)
 from repro.core.topology import make_latency
 
 
@@ -34,24 +38,114 @@ def test_parallel_ring_valid_and_reasonable(m):
     assert d == pytest.approx(diameter_scipy(ov.adjacency), rel=1e-4)
 
 
+@pytest.mark.parametrize("m", [1, 3, 5, 8, 17, 63, 64, 80])
+def test_parallel_ring_any_m_and_host_parity(m):
+    """Any 1 <= M (non-divisible N, M = N, even M > N) builds a valid ring,
+    and the device-batched engine matches the host reference loop exactly
+    (both consume the same PartitionPlan randomness)."""
+    w = make_latency("gaussian", 64, seed=3)
+    perm = parallel_ring(w, m, seed=0)
+    assert sorted(perm) == list(range(64)), m
+    assert np.array_equal(perm, parallel_ring_host(w, m, seed=0)), m
+
+
+def test_parallel_ring_rejects_m_zero():
+    w = make_latency("uniform", 8, seed=0)
+    with pytest.raises(ValueError):
+        parallel_ring(w, 0, seed=0)
+
+
+def test_parallel_rings_batch_matches_single_builds():
+    """B builds fused into one device call == B independent single builds."""
+    w = make_latency("bitnode", 30, seed=7)
+    seeds = [3, 11, 42]
+    rings = parallel_rings(w, 4, seeds)
+    for s, ring in zip(seeds, rings):
+        assert np.array_equal(ring, parallel_ring(w, 4, seed=s)), s
+
+
+def test_scored_stitch_never_worse_than_naive():
+    """The naive merge is always a candidate, so the scored stitch can only
+    improve the built ring's own diameter."""
+    w = make_latency("gaussian", 64, seed=3)
+    from repro.overlay import Overlay
+    for m in (4, 8, 16):
+        d_naive = Overlay.from_rings(
+            w, [parallel_ring(w, m, seed=0, stitch="naive")]).diameter()
+        d_scored = Overlay.from_rings(
+            w, [parallel_ring(w, m, seed=0, stitch="scored")]).diameter()
+        assert d_scored <= d_naive + 1e-6, (m, d_naive, d_scored)
+
+
+def test_stitch_candidates_preserve_segment_edges():
+    with pytest.raises(ValueError):
+        stitch_segments(np.zeros((4, 4)), [np.array([], np.intp)])
+    with pytest.raises(ValueError):
+        stitch_segments(np.zeros((4, 4)), [np.arange(4)], stitch="bogus")
+    # a single segment has nothing to refine: identity merge on both paths
+    w = make_latency("uniform", 8, seed=0)
+    seg = [np.arange(8)]
+    assert np.array_equal(stitch_segments(w, seg, "naive"),
+                          stitch_segments(w, seg, "scored"))
+
+
+def test_score_partition_blocks_nan_for_empty_partitions():
+    """M > N: per-requested-partition scores, NaN marking empty blocks."""
+    w = make_latency("uniform", 5, seed=1)
+    ring, scores = parallel_ring_scored(w, 8, seed=1, score_blocks=True)
+    assert sorted(ring) == list(range(5))
+    assert scores.shape == (8,)
+    assert np.isfinite(scores[:5]).all()      # 5 singleton blocks, diameter 0
+    assert np.isnan(scores[5:]).all()         # 3 empty partitions
+    # direct call with an explicitly empty segment in the middle
+    got = score_partition_blocks(w, [np.array([0, 1]),
+                                     np.array([], np.intp),
+                                     np.array([2, 3, 4])])
+    assert np.isfinite(got[0]) and np.isnan(got[1]) and np.isfinite(got[2])
+
+
+def test_parallel_dqn_constructor_uneven_partitions():
+    """constructor="dqn" rides the vectorized rollout engine with partitions
+    as the env batch; n=13, m=3 exercises unequal (5,4,4) padded sizes."""
+    w = make_latency("uniform", 13, seed=1)
+    rings = parallel_rings(w, 3, [0, 1], constructor="dqn",
+                           dqn=SegmentDQNConfig(epochs=2, n_envs=2))
+    for ring in rings:
+        assert sorted(ring) == list(range(13))
+    # tiny blocks (p_max <= 2) short-circuit to the nearest constructor
+    w6 = make_latency("uniform", 6, seed=0)
+    assert np.array_equal(parallel_ring(w6, 3, seed=0, constructor="dqn"),
+                          parallel_ring(w6, 3, seed=0, constructor="nearest"))
+
+
+def test_parallel_builder_constructor_and_stitch_knobs():
+    w = make_latency("uniform", 20, seed=4)
+    ov = overlay.build("parallel", w,
+                       overlay.ParallelConfig(m=3, stitch="naive"), seed=2)
+    assert ov.policy == "parallel" and ov.num_rings == 1
+    ov2 = overlay.build("parallel", w,
+                        overlay.ParallelConfig(m=3, stitch="scored"), seed=2)
+    assert diameter_scipy(ov2.adjacency) <= diameter_scipy(ov.adjacency) + 1e-6
+
+
 def test_parallel_ring_shmap_matches_host():
-    """shard_map partition build == host build (run with 8 fake devices)."""
+    """shard_map partition build == host build bit-for-bit on an M>1 mesh
+    (8 fake devices), including the padded paths: non-divisible N (64, 30)
+    and M > N (6 nodes over 8 partitions)."""
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax
 from repro.core.topology import make_latency
-from repro.core.parallel import parallel_ring, parallel_ring_shmap
-w = make_latency("gaussian", 64, seed=3)
+from repro.core.parallel import parallel_ring_host, parallel_ring_shmap
 from repro.compat import make_mesh
 mesh = make_mesh((8,), ("partitions",))
-p_host = parallel_ring(w, 8, seed=0)
-p_shm = parallel_ring_shmap(w, mesh, seed=0)
-assert sorted(p_shm) == list(range(64))
-from repro.overlay import Overlay
-dh = Overlay.from_rings(w, [p_host]).diameter()
-ds = Overlay.from_rings(w, [p_shm]).diameter()
-assert abs(dh - ds) < 1e-6, (dh, ds)
+for n in (64, 30, 6):
+    w = make_latency("gaussian", n, seed=3)
+    p_shm = parallel_ring_shmap(w, mesh, seed=0)
+    p_host = parallel_ring_host(w, 8, seed=0)
+    assert sorted(p_shm) == list(range(n)), n
+    assert np.array_equal(p_shm, p_host), (n, p_shm, p_host)
 print("OK")
 """
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,

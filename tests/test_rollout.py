@@ -144,3 +144,54 @@ def test_device_buffer_wraps_capacity():
         k_rings=k, n_rounds=1, batch_size=4, updates_per_step=1)
     assert int(buf2.size) == cap
     assert 0 <= int(buf2.ptr) < cap
+
+
+def test_rollout_sizes_none_equals_full_sizes():
+    """The padded-env path with sizes == N must be bit-identical to the
+    default path (the parallel engine relies on this degenerate case)."""
+    n, k, n_envs = 8, 2, 3
+    params = _params(seed=1)
+    ws = jnp.asarray(np.stack([make_latency("uniform", n, seed=i)
+                               for i in range(n_envs)]), jnp.float32)
+    plan = rollout.make_plan(np.random.default_rng(3), n_envs, k, n)
+    args = (jnp.asarray(plan.starts), jnp.asarray(plan.eps_u),
+            jnp.asarray(plan.choice_u))
+    a1, r1, d1 = rollout.rollout_episodes(params, ws, *args, 0.4, 0.1,
+                                          k_rings=k, n_rounds=2)
+    a2, r2, d2 = rollout.rollout_episodes(
+        params, ws, *args, 0.4, 0.1, k_rings=k, n_rounds=2,
+        sizes=jnp.full((n_envs,), n, jnp.int32))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_rollout_sizes_padded_envs_build_real_subrings():
+    """Envs with sizes[e] < N (padded blocks, the parallel engine's batch
+    layout) must build rings that are permutations of their real nodes
+    only, with zero reward and frozen state on the idle steps."""
+    n, k, n_envs = 8, 2, 3
+    sizes = np.array([8, 5, 3], np.int32)
+    params = _params(seed=4)
+    ws = np.stack([make_latency("gaussian", n, seed=20 + i)
+                   for i in range(n_envs)])
+    ws[1, 5:, :] = ws[1, :, 5:] = 0.0       # pad region (masked anyway)
+    ws[2, 3:, :] = ws[2, :, 3:] = 0.0
+    plan = rollout.make_plan(np.random.default_rng(6), n_envs, k, n)
+    starts = (plan.starts % sizes[:, None]).astype(np.int32)
+    actions, rewards, d = rollout.rollout_episodes(
+        params, jnp.asarray(ws, jnp.float32), jnp.asarray(starts),
+        jnp.asarray(plan.eps_u), jnp.asarray(plan.choice_u), 0.5, 0.1,
+        k_rings=k, n_rounds=2, sizes=jnp.asarray(sizes))
+    actions = np.asarray(actions)
+    rewards = np.asarray(rewards)
+    for e, s in enumerate(sizes):
+        for ring_i in range(k):
+            base = ring_i * n
+            perm = [int(starts[e, ring_i])] + \
+                list(actions[base:base + s - 1, e])
+            assert sorted(perm) == list(range(s)), (e, ring_i, perm)
+            # idle steps past the per-env closing edge earn nothing
+            assert np.all(rewards[base + s:base + n, e] == 0.0), (e, ring_i)
+    assert np.asarray(d).shape == (n_envs,)
+    assert np.isfinite(np.asarray(d)).all()
