@@ -1,0 +1,177 @@
+"""Fig. 17 (service): the live control plane under churn + drift.
+
+Boots the :mod:`repro.service` daemon in-process (real HTTP over loopback),
+streams a combined ``churn_with_drift`` trace at N=128 through the /v1
+ingest API, and measures
+
+* sustained ingest throughput (events/s through ``POST /v1/events``),
+* query latency p50/p99 at rest, and
+* query latency p99 WHILE a re-optimization cycle is in flight — the
+  double-buffered swap must keep the read path answering.
+
+Then it exercises the crash window: a re-optimization is forced to die
+between the buffer swap and the snapshot commit, and the restarted state
+must serve exactly the diameter recorded in the last COMMITTED snapshot.
+
+Hard gate (enforced via ``benchmarks.run``'s registry): query p99 during
+the in-flight re-optimization stays under ``p99_bound_ms`` AND the
+post-restart diameter equals the pre-crash snapshot diameter.  Results land
+in ``BENCH_fig17_service.json``.
+
+    PYTHONPATH=src python -m benchmarks.fig17_service [--events 200]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.dynamics.scenarios import Trace, churn_with_drift
+from repro.service import (Reoptimizer, ServiceClient, ServiceError,
+                           ServiceServer, ServiceState, latest_snapshot)
+
+
+class _SimulatedCrash(RuntimeError):
+    """Raised by the crash hook: dies after the swap, before the snapshot."""
+
+
+def _percentile(samples, q):
+    return float(np.percentile(np.asarray(samples), q)) if samples else float("nan")
+
+
+def _query_round(client: ServiceClient, nodes, lat_ms) -> None:
+    """One mixed query round; appends per-request latencies in ms."""
+    for call in (client.stats,
+                 (lambda: client.route(nodes[0], nodes[-1])) if len(nodes) >= 2
+                 else client.stats,
+                 client.diameter):
+        t0 = time.perf_counter()
+        try:
+            call()
+        except ServiceError:
+            pass        # a routed node died mid-round; the answer still came
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+
+
+def run(events: int = 200, n0: int = 128, seed: int = 0,
+        eps: float = 0.49, p99_bound_ms: float = 250.0,
+        out_json: str = "BENCH_fig17_service.json"):
+    trace = churn_with_drift(
+        n0=n0, dist="bitnode", seed=seed, horizon=30_000.0,
+        join_rate=events / 2 / 30_000.0, leave_rate=events / 2 / 30_000.0)
+    evs = sorted(trace.events, key=lambda e: e.time)[:events]
+    assert len(evs) >= events // 2, f"trace produced only {len(evs)} events"
+
+    snapdir = tempfile.mkdtemp(prefix="dgro-fig17-")
+    world = Trace(n0=n0, capacity=trace.capacity, dist="bitnode", seed=seed,
+                  events=[], name="fig17")
+    state = ServiceState.fresh(world, policy="dgro", snapshot_dir=snapdir,
+                               seed=seed)
+    server = ServiceServer(state, reopt_enabled=False).start()
+    try:
+        client = ServiceClient(server.url)
+        client.wait_ready()
+
+        # ---- part A: sustained ingest throughput + baseline latency ------
+        lat_base = []
+        t0 = time.perf_counter()
+        for i in range(0, len(evs), 10):
+            res = client.post_events(evs[i:i + 10])
+            assert res["accepted"] > 0, res
+            _query_round(client, client.adjacency()["nodes"], lat_base)
+        ingest_s = time.perf_counter() - t0
+        events_per_s = len(evs) / ingest_s
+        n_live = client.stats()["n_live"]
+
+        # ---- part B: query p99 while a re-optimization is in flight ------
+        # the hook stretches the post-swap window so the read path is probed
+        # inside it too, not just during the optimize phase
+        reopt = Reoptimizer(state, every=2**31, eps=eps, seed=seed,
+                            crash_hook=lambda: time.sleep(0.2))
+        lat_reopt = []
+        swapped = 0
+        for attempt in range(5):
+            worker = threading.Thread(target=reopt.step,
+                                      kwargs={"force": True})
+            nodes = client.adjacency()["nodes"]
+            v0 = state.version
+            worker.start()
+            while worker.is_alive():
+                _query_round(client, nodes, lat_reopt)
+            worker.join()
+            swapped += int(state.version > v0)
+            if len(lat_reopt) >= 60 and swapped:
+                break
+        p99_reopt = _percentile(lat_reopt, 99)
+    finally:
+        server.stop(final_snapshot=False)
+
+    # ---- part C: crash between swap and snapshot, then restart -----------
+    state.write_snapshot(reason="bench-precrash")
+    pre_seq, pre_payload = latest_snapshot(snapdir)
+    crasher = Reoptimizer(
+        state, every=2**31, eps=eps, seed=seed + 1,
+        crash_hook=lambda: (_ for _ in ()).throw(_SimulatedCrash()))
+    crashed = False
+    for attempt in range(5):
+        try:
+            crasher.step(force=True)        # "keep" cycles don't reach the hook
+        except _SimulatedCrash:
+            crashed = True
+            break
+    post_seq, post_payload = latest_snapshot(snapdir)
+    assert post_seq == pre_seq, "crash window leaked a snapshot"
+
+    restored = ServiceState.restore(snapdir)
+    restart_diam = restored.diameter(exact=True)["diameter"]
+    snap_diam = post_payload["diameter"]
+    restart_matches = abs(restart_diam - snap_diam) <= 1e-5 * max(1.0, snap_diam)
+
+    p99_ok = np.isfinite(p99_reopt) and p99_reopt <= p99_bound_ms
+    answered = len(lat_reopt)
+    results = {
+        "throughput": {"n0": n0, "events": len(evs),
+                       "events_per_s": events_per_s, "n_live_end": n_live},
+        "latency": {"baseline_p50_ms": _percentile(lat_base, 50),
+                    "baseline_p99_ms": _percentile(lat_base, 99),
+                    "during_reopt_p99_ms": p99_reopt,
+                    "samples_during_reopt": answered,
+                    "reopt_swaps": swapped},
+        "gate": {"query_p99_ms_during_reopt": p99_reopt,
+                 "p99_bound_ms": p99_bound_ms,
+                 "queries_answered_during_reopt": answered,
+                 "crash_injected": crashed,
+                 "snapshot_diameter": snap_diam,
+                 "restart_diameter": restart_diam,
+                 "restart_matches_snapshot": restart_matches},
+    }
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    shutil.rmtree(snapdir, ignore_errors=True)
+
+    print("metric,value")
+    print(f"events_per_s,{events_per_s:.0f}")
+    print(f"baseline_p99_ms,{_percentile(lat_base, 99):.2f}")
+    print(f"during_reopt_p99_ms,{p99_reopt:.2f}")
+    print(f"restart_diameter,{restart_diam:.4f}")
+    print(f"snapshot_diameter,{snap_diam:.4f}")
+    return {"name": "fig17_service",
+            "us_per_call": ingest_s * 1e6 / max(len(evs), 1),
+            "derived": f"{events_per_s:.0f} ev/s; p99 {p99_reopt:.1f}ms "
+                       f"during reopt ({answered} queries); restart diam "
+                       f"{'==' if restart_matches else '!='} snapshot",
+            "passes_gate": bool(p99_ok and answered > 0 and restart_matches)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=200)
+    ap.add_argument("--n0", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(events=args.events, n0=args.n0, seed=args.seed)

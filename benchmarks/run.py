@@ -3,15 +3,110 @@
 Prints ``name,us_per_call,derived`` CSV rows (reduced CPU-scale defaults;
 each figure module has CLI flags for the full-scale sweeps).
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+Gates are FIRST-CLASS: every figure declares in ``GATES`` whether it is
+informational or carries a hard pass/fail condition, which boolean key in
+its result dict the harness enforces, and which ``BENCH_*.json`` metric
+records the latest measured value.  ``--list`` prints the registry with the
+latest values without running anything.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--list]
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import io
+import json
+import os
 import sys
 import traceback
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """A figure's declared pass/fail contract.
+
+    ``key`` names the boolean in the figure's result dict the harness
+    enforces; ``None`` marks a purely informational figure (its soft
+    indicators print but never fail the run).  ``bench_file`` /
+    ``bench_metric`` (a dotted path) locate the latest measured value in
+    the figure's emitted ``BENCH_*.json`` for ``--list``.
+    """
+
+    description: str
+    key: Optional[str] = None
+    bench_file: Optional[str] = None
+    bench_metric: Optional[str] = None
+
+    @property
+    def hard(self) -> bool:
+        return self.key is not None
+
+    def passes(self, res: dict) -> bool:
+        if self.key is None:
+            return True
+        if self.key not in res:
+            raise KeyError(
+                f"gate declares key {self.key!r} but the figure result "
+                f"only has {sorted(res)}")
+        return bool(res[self.key])
+
+
+GATES = {
+    "fig09": Gate("device rollout >= 10x host steps/s at N=32, E=8",
+                  key="passes_gate", bench_file="BENCH_fig09_dqn.json",
+                  bench_metric="rollout_gate.speedup"),
+    "fig10": Gate("informational: DGRO norm-diam within 1.15x of GA"),
+    "fig11-uniform": Gate("informational: adapt reduces mean diameter"),
+    "fig11-gaussian": Gate("informational: adapt reduces mean diameter"),
+    "fig15-fabric": Gate("informational: adapt reduces mean diameter"),
+    "fig15-bitnode": Gate("informational: adapt reduces mean diameter"),
+    "fig12": Gate("informational: best ring count M varies by setting"),
+    "fig13": Gate("informational: dgro <= min(random, nearest) per size"),
+    "fig17-bitnode": Gate("informational: dgro <= min(random, nearest)"),
+    "fig14": Gate("batched construction >= 5x host loop at N=256, M=8 "
+                  "and diameter parity <= 1.05",
+                  key="passes_gate", bench_file="BENCH_fig14_parallel.json",
+                  bench_metric="gate_speedup.speedup"),
+    "fig15-batcheval": Gate("batched eval >= 5x scipy at the largest batch",
+                            key="passes_gate"),
+    "fig16-churn": Gate("incremental maintenance >= 5x full recompute "
+                        "at N=128",
+                        key="passes_gate", bench_file="BENCH_fig16_churn.json",
+                        bench_metric="gate.speedup"),
+    "fig17-service": Gate("query p99 stays bounded during in-flight reopt "
+                          "and restart diameter == pre-crash snapshot",
+                          key="passes_gate",
+                          bench_file="BENCH_fig17_service.json",
+                          bench_metric="gate.query_p99_ms_during_reopt"),
+    "roofline": Gate("informational: kernel roofline table renders"),
+}
+
+
+def _bench_value(gate: Gate) -> str:
+    """Latest measured value for --list, from the figure's BENCH json."""
+    if gate.bench_file is None:
+        return "-"
+    if not os.path.exists(gate.bench_file):
+        return "(no run yet)"
+    try:
+        with open(gate.bench_file) as f:
+            node = json.load(f)
+        for part in (gate.bench_metric or "").split("."):
+            node = node[part]
+        return f"{node:.2f}" if isinstance(node, float) else str(node)
+    except (KeyError, TypeError, ValueError) as e:
+        return f"(unreadable: {e!r})"
+
+
+def list_gates() -> None:
+    print(f"{'figure':<16} {'gate':<6} {'latest':<14} condition")
+    for name, gate in GATES.items():
+        kind = "HARD" if gate.hard else "info"
+        print(f"{name:<16} {kind:<6} {_bench_value(gate):<14} "
+              f"{gate.description}")
 
 
 def main() -> None:
@@ -20,12 +115,20 @@ def main() -> None:
                     help="minimal sizes (CI smoke)")
     ap.add_argument("--verbose", action="store_true",
                     help="stream per-figure detail output")
+    ap.add_argument("--list", action="store_true",
+                    help="print figure -> gate -> latest BENCH value, "
+                         "run nothing")
     args = ap.parse_args()
+
+    if args.list:
+        list_gates()
+        return
 
     from benchmarks import (fig09_training_curve, fig10_dgro_vs_ga,
                             fig11_ring_selection, fig12_ring_ablation,
                             fig13_kring_compare, fig14_parallel,
-                            fig15_batcheval, fig16_churn, roofline_table)
+                            fig15_batcheval, fig16_churn, fig17_service,
+                            roofline_table)
 
     fast = args.fast
     jobs = [
@@ -68,12 +171,21 @@ def main() -> None:
         ("fig16-churn", lambda: fig16_churn.run(
             gate_ops=40 if fast else 80,
             traj_n0=24 if fast else 48)),
+        # the service gate always exercises a live daemon + crash/restart;
+        # --fast only shrinks the event stream
+        ("fig17-service", lambda: fig17_service.run(
+            events=60 if fast else 200,
+            n0=64 if fast else 128)),
         ("roofline", roofline_table.run),
     ]
+
+    undeclared = [name for name, _ in jobs if name not in GATES]
+    assert not undeclared, f"jobs missing a GATES entry: {undeclared}"
 
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in jobs:
+        gate = GATES[name]
         buf = io.StringIO()
         try:
             if args.verbose:
@@ -81,15 +193,12 @@ def main() -> None:
             else:
                 with contextlib.redirect_stdout(buf):
                     res = fn()
-            # hard gates opt in via 'passes_gate' (fig09's >=10x rollout,
-            # fig15's and fig16's >=5x throughput claims); soft
-            # 'holds'/'improves' stay informational
-            if res.get("passes_gate", True):
+            if gate.passes(res):
                 print(f"{res['name']},{res['us_per_call']:.1f},{res['derived']}")
             else:
                 failures += 1
                 print(f"{res['name']},{res['us_per_call']:.1f},"
-                      f"GATE FAILED: {res['derived']}")
+                      f"GATE FAILED ({gate.description}): {res['derived']}")
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR {e!r}")

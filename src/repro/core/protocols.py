@@ -1,107 +1,43 @@
-"""DEPRECATED tuple facade over ``repro.overlay`` (§V-A baselines).
+"""Tuple-era protocol helpers — the builders now live in ``repro.overlay``.
 
-The Chord / RAPID / Perigee builders used to live here and return raw
-``(adjacency, rings)`` tuples.  They are now registered builders in
-:mod:`repro.overlay` (``overlay.build("chord", w, rng=rng)`` etc.); the
-functions below are thin shims that unwrap an :class:`~repro.overlay.Overlay`
-for call sites that still expect tuples.  Each shim emits a
-``DeprecationWarning`` exactly once per process.
-
-New code should use::
+The Chord / RAPID / Perigee construction rules used to live here and return
+raw ``(adjacency, rings)`` tuples; they moved to registered builders in
+:mod:`repro.overlay` (PR 3) and the deprecation shims that bridged the two
+APIs are now REMOVED (two PR cycles past the deprecation).  Importing a
+removed name raises ``AttributeError`` with the replacement spelled out::
 
     from repro import overlay
-    ov = overlay.build("perigee", w, overlay.PerigeeConfig(ring="nearest"),
-                       rng=rng)
-    ov.adjacency, ov.rings        # what the tuple used to carry
+    ov = overlay.build("chord", w, rng=rng)       # was protocols.chord
+    ov.adjacency, ov.rings                        # what the tuple carried
+
+Only :func:`node_degrees` remains — a plain adjacency utility with no
+Overlay equivalent at the raw-matrix level.
 """
 from __future__ import annotations
 
-import warnings
-from typing import List, Sequence, Tuple
-
 import numpy as np
 
-from .diameter import is_edge, ring_edges
+from .diameter import is_edge
 
-__all__ = ["chord", "rapid", "perigee", "node_degrees", "with_replaced_rings"]
+__all__ = ["node_degrees"]
 
-_WARNED: set = set()
-
-
-def _warn_legacy(name: str, replacement: str) -> None:
-    """One DeprecationWarning per legacy shim per process (shared by the
-    tuple facades here and in selection / qlearning)."""
-    if name in _WARNED:
-        return
-    _WARNED.add(name)
-    warnings.warn(
-        f"{name} is deprecated; use {replacement} "
-        f"(the repro.overlay API replaces (adjacency, rings) tuples)",
-        DeprecationWarning, stacklevel=3)
+_REMOVED = {
+    "chord": 'overlay.build("chord", w, rng=rng)',
+    "rapid": 'overlay.build("rapid", w, overlay.RapidConfig(k=k), rng=rng)',
+    "perigee": 'overlay.build("perigee", w, overlay.PerigeeConfig(...), rng=rng)',
+    "with_replaced_rings": "Overlay.replace_rings(new_rings)",
+}
 
 
-def chord(w: np.ndarray, rng: np.random.Generator
-          ) -> Tuple[np.ndarray, List]:
-    """Deprecated: ``overlay.build("chord", w, rng=rng)``."""
-    _warn_legacy("repro.core.protocols.chord",
-                 'overlay.build("chord", w, rng=rng)')
-    from repro import overlay
-    return overlay.build("chord", w, rng=rng).to_tuple()
-
-
-def rapid(w: np.ndarray, rng: np.random.Generator, k: int | None = None
-          ) -> Tuple[np.ndarray, List]:
-    """Deprecated: ``overlay.build("rapid", w, overlay.RapidConfig(k=k), ...)``."""
-    _warn_legacy("repro.core.protocols.rapid",
-                 'overlay.build("rapid", w, k=k, rng=rng)')
-    from repro import overlay
-    return overlay.build("rapid", w, overlay.RapidConfig(k=k),
-                         rng=rng).to_tuple()
-
-
-def perigee(
-    w: np.ndarray,
-    rng: np.random.Generator,
-    degree: int | None = None,
-    ring_kind: str = "random",
-) -> Tuple[np.ndarray, List]:
-    """Deprecated: ``overlay.build("perigee", w, overlay.PerigeeConfig(...))``."""
-    _warn_legacy("repro.core.protocols.perigee",
-                 'overlay.build("perigee", w, degree=d, ring=kind, rng=rng)')
-    from repro import overlay
-    return overlay.build(
-        "perigee", w, overlay.PerigeeConfig(degree=degree, ring=ring_kind),
-        rng=rng).to_tuple()
+def __getattr__(name: str):
+    if name in _REMOVED:
+        raise AttributeError(
+            f"repro.core.protocols.{name} was removed; use {_REMOVED[name]} "
+            f"(the repro.overlay API replaced (adjacency, rings) tuples; "
+            f"see overlay.build)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def node_degrees(adj: np.ndarray) -> np.ndarray:
     """Per-node overlay degree (number of actual edges per row)."""
     return is_edge(adj).sum(axis=1)
-
-
-def with_replaced_rings(
-    w: np.ndarray,
-    base_edges_adj: np.ndarray,
-    old_rings: Sequence[np.ndarray],
-    new_rings: Sequence[np.ndarray],
-) -> np.ndarray:
-    """Deprecated: :meth:`repro.overlay.Overlay.replace_rings`.
-
-    Rebuild an overlay with its rings swapped.  ``base_edges_adj`` must be
-    the overlay *without* the old rings; callers that only have the full
-    overlay should rebuild from scratch instead.  The replacement set must
-    match the old ring count — a silently changed count would alter the
-    per-node degree budget.
-    """
-    _warn_legacy("repro.core.protocols.with_replaced_rings",
-                 "Overlay.replace_rings(new_rings)")
-    if len(new_rings) != len(old_rings):
-        raise ValueError(
-            f"replacement ring count {len(new_rings)} != current "
-            f"{len(old_rings)}; rebuild the overlay to change the ring count")
-    d = np.array(base_edges_adj, copy=True)
-    for ring in new_rings:
-        for u, v in ring_edges(ring):
-            d[u, v] = min(d[u, v], w[u, v])
-            d[v, u] = min(d[v, u], w[v, u])
-    return d

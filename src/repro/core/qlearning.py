@@ -45,7 +45,17 @@ from .rollout import RolloutPlan, make_plan
 from .topology import make_latency
 
 __all__ = ["DQNConfig", "ReplayBuffer", "train_dqn", "construct_ring_dqn",
-           "dgro_overlay", "dgro_topology", "TrainLog"]
+           "dgro_overlay", "TrainLog"]
+
+
+def __getattr__(name: str):
+    if name == "dgro_topology":
+        raise AttributeError(
+            "repro.core.qlearning.dgro_topology was removed; use "
+            "dgro_overlay(params, cfg, w, ...) which returns an Overlay "
+            "(.rings / .diameter() carry what the tuple did; see "
+            "overlay.build)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -422,14 +432,3 @@ def dgro_overlay(params: QParams, cfg: DQNConfig, w: np.ndarray,
     perms = rollout.perms_from_actions(starts, np.asarray(actions), k, n)[best]
     return Overlay.from_rings(
         w, perms, policy="dgro-dqn").cache_diameter(float(d[best]))
-
-
-def dgro_topology(params: QParams, cfg: DQNConfig, w: np.ndarray,
-                  n_starts: int = 10, seed: int = 0) -> Tuple[List[np.ndarray], float]:
-    """Deprecated tuple facade over :func:`dgro_overlay`."""
-    from repro.core.protocols import _warn_legacy
-
-    _warn_legacy("repro.core.qlearning.dgro_topology",
-                 "repro.core.qlearning.dgro_overlay(params, cfg, w, ...)")
-    ov = dgro_overlay(params, cfg, w, n_starts=n_starts, seed=seed)
-    return [np.asarray(r) for r in ov.rings], ov.diameter()

@@ -30,8 +30,17 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard (overlay -> here)
     from repro.overlay import Overlay
 
 __all__ = ["LatencyStats", "measure_latency_stats", "clustering_ratio",
-           "select_ring_kind", "score_candidate_rings", "adapt",
-           "adapt_overlay"]
+           "select_ring_kind", "score_candidate_rings", "adapt"]
+
+
+def __getattr__(name: str):
+    if name == "adapt_overlay":
+        raise AttributeError(
+            "repro.core.selection.adapt_overlay was removed; use "
+            "selection.adapt(Overlay.from_adjacency(w, adj, "
+            "fold_weights=True), ...) (the repro.overlay API replaced "
+            "(adjacency, rings) tuples; see overlay.build)")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,28 +177,3 @@ def adapt(
     scores = score_candidate_rings(w, adj, rings)
     best = np.stack(rings)[int(np.argmin(scores))]
     return overlay.add_ring(best), kind, rho
-
-
-def adapt_overlay(
-    w: np.ndarray,
-    adj: np.ndarray,
-    eps: float = 0.3,
-    seed: int = 0,
-    n_candidates: int = 4,
-) -> Tuple[np.ndarray, RingKind, float]:
-    """Deprecated adjacency-level facade over :func:`adapt`.
-
-    Wraps ``(w, adj)`` in an :class:`~repro.overlay.Overlay` and unwraps the
-    adapted adjacency, for call sites that predate the Overlay type.  The
-    legacy tolerance for adjacencies whose edge weights deviate from ``w``
-    is kept by folding those weights into the effective latency matrix.
-    """
-    from repro.core.protocols import _warn_legacy
-    from repro.overlay import Overlay
-
-    _warn_legacy("repro.core.selection.adapt_overlay",
-                 "repro.core.selection.adapt(overlay, ...)")
-    new_ov, kind, rho = adapt(
-        Overlay.from_adjacency(w, adj, fold_weights=True), eps=eps,
-        seed=seed, n_candidates=n_candidates)
-    return new_ov.adjacency, kind, rho

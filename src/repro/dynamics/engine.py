@@ -350,6 +350,54 @@ class ChurnEngine:
         self._seq = 0
         self._ran = False
         self._pending_failed: set[int] = set()
+        # scheduled-but-not-yet-due events (SWIM leave confirmations) for the
+        # live-ingest path; run() keeps its own single heap
+        self._pending: List[Tuple[float, int, Event]] = []
+        self.clock = 0.0          # time of the last processed event
+        self.events_processed = 0
+
+    @classmethod
+    def restore(cls, trace: Trace, policy: OverlayPolicy, *,
+                w: np.ndarray, adj: np.ndarray, alive: np.ndarray,
+                latency_factor: np.ndarray, drift_scale: np.ndarray,
+                clock: float = 0.0, events_processed: int = 0,
+                rebuild_threshold: int = 8, mode: str = "incremental",
+                detect_failures: bool = False, swim: SwimConfig | None = None,
+                straggler_factor: float = 3.0, seed: int = 0) -> "ChurnEngine":
+        """Rebuild an engine from externally-snapshotted state (crash
+        recovery, ``repro.service``).
+
+        The policy is adopted as-is — the caller must have restored its ring
+        membership (``policy.rings``) to match ``adj`` — and the distance
+        matrix is recomputed exactly from the restored adjacency, so a
+        restored engine never inherits staleness from before the crash.
+        Unconfirmed failures are NOT restored: a crash loses in-flight SWIM
+        confirmations, and the victims simply fail again on re-detection
+        (the honest outcome for a restarted observer).
+        """
+        eng = cls.__new__(cls)
+        eng.trace = trace
+        eng.policy = policy
+        eng.rng = np.random.default_rng(seed)
+        eng.swim = swim or SwimConfig()
+        eng.detect_failures = detect_failures
+        eng.straggler_factor = straggler_factor
+        eng.w_base = trace.latency()
+        c = trace.capacity
+        assert np.asarray(w).shape == (c, c), (np.asarray(w).shape, c)
+        eng.latency_factor = np.asarray(latency_factor, np.float32).copy()
+        eng.drift_scale = np.asarray(drift_scale, np.float32).copy()
+        eng.inc = IncrementalDistances(
+            np.asarray(w, np.float32), np.asarray(adj, np.float32),
+            np.asarray(alive, bool), rebuild_threshold=rebuild_threshold,
+            mode=mode)
+        eng._seq = 0
+        eng._ran = False
+        eng._pending_failed = set()
+        eng._pending = []
+        eng.clock = float(clock)
+        eng.events_processed = int(events_processed)
+        return eng
 
     # -- conveniences -----------------------------------------------------
 
@@ -470,6 +518,69 @@ class ChurnEngine:
                 self.inc.set_latency(u, int(v), float(new_w[u, v]))
         # demoted: only the tombstoned node's rows changed — nothing to do
 
+    # -- event dispatch (shared by run() replay and live ingest) ----------
+
+    def _dispatch(self, heap, t: float, e: Event) -> None:
+        """Apply one due event; SWIM leave confirmations scheduled by a fail
+        go into ``heap`` (run()'s replay heap, or ``self._pending`` for the
+        live-ingest path)."""
+        if e.kind == "join":
+            self._handle_join(e.node)
+        elif e.kind == "leave":
+            self._confirmed_leave(e.node)
+        elif e.kind == "fail":
+            self._handle_fail(heap, t, e.node)
+        elif e.kind == "latency_drift":
+            self._handle_drift(e.factor, e.region)
+        elif e.kind == "straggler":
+            self._handle_straggler(e.node, e.factor)
+        else:
+            raise ValueError(f"unknown event kind {e.kind!r}")
+        self.clock = max(self.clock, t)
+        self.events_processed += 1
+
+    # -- live ingest (repro.service) --------------------------------------
+
+    def process(self, event: Event) -> int:
+        """Apply one externally-arriving event NOW (the control-plane path:
+        the event stream is open-ended, so there is no trace heap).
+
+        Scheduled SWIM confirmations that came due strictly before
+        ``event.time`` are drained first — identical ordering to run()'s
+        single heap, where a trace event at the same timestamp pops before
+        the later-pushed confirmation.  Returns the number of events applied
+        (1 + drained confirmations).  Events must arrive in nondecreasing
+        time order; a stale timestamp raises ``ValueError`` (the service
+        maps it to HTTP 409).
+        """
+        if event.time < self.clock:
+            raise ValueError(
+                f"event at t={event.time} arrived after the clock advanced "
+                f"to t={self.clock}; the control plane ingests events in "
+                f"nondecreasing time order")
+        n = self._drain_pending(event.time)
+        self._dispatch(self._pending, event.time, event)
+        return n + 1
+
+    def flush(self, until: float = float("inf")) -> int:
+        """Drain scheduled confirmations due at or before ``until`` (all of
+        them by default).  Returns the number applied."""
+        return self._drain_pending(until, strict=False)
+
+    def _drain_pending(self, until: float, strict: bool = True) -> int:
+        n = 0
+        while self._pending and (self._pending[0][0] < until or
+                                 (not strict and self._pending[0][0] <= until)):
+            t, _, e = heapq.heappop(self._pending)
+            self._dispatch(self._pending, t, e)
+            n += 1
+        return n
+
+    @property
+    def pending_confirmations(self) -> int:
+        """Failures detected but not yet SWIM-confirmed (live-ingest path)."""
+        return len(self._pending)
+
     # -- main loop --------------------------------------------------------
 
     def run(self, record: bool = True,
@@ -493,18 +604,7 @@ class ChurnEngine:
                 self.inc.diameter(exact=sample_exact)))
         while heap:
             t, _, e = heapq.heappop(heap)
-            if e.kind == "join":
-                self._handle_join(e.node)
-            elif e.kind == "leave":
-                self._confirmed_leave(e.node)
-            elif e.kind == "fail":
-                self._handle_fail(heap, t, e.node)
-            elif e.kind == "latency_drift":
-                self._handle_drift(e.factor, e.region)
-            elif e.kind == "straggler":
-                self._handle_straggler(e.node, e.factor)
-            else:
-                raise ValueError(f"unknown event kind {e.kind!r}")
+            self._dispatch(heap, t, e)
             if record:
                 samples.append(TrajectorySample(
                     t, e.kind, self.inc.n_live,

@@ -23,16 +23,16 @@ Scenarios (all deterministic in ``seed``):
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Callable, Dict, List
 
 import numpy as np
 
+from repro import serde
 from repro.core.topology import N_FABRIC_SITES, make_latency
 
 __all__ = ["Event", "Trace", "poisson_churn", "flash_crowd",
            "regional_failure", "diurnal_drift", "straggler_storm",
-           "SCENARIOS"]
+           "merge_traces", "churn_with_drift", "SCENARIOS"]
 
 EVENT_KINDS = ("join", "leave", "fail", "latency_drift", "straggler")
 
@@ -93,15 +93,15 @@ class Trace:
         return make_latency(self.dist, self.capacity, seed=self.seed)
 
     def to_json(self) -> str:
-        return json.dumps({
+        return serde.dumps({
             "name": self.name, "n0": self.n0, "capacity": self.capacity,
             "dist": self.dist, "seed": self.seed,
             "events": [e.to_dict() for e in self.events],
-        }, indent=None, sort_keys=True)
+        }, indent=None)
 
     @classmethod
     def from_json(cls, s: str) -> "Trace":
-        d = json.loads(s)
+        d = serde.loads(s, what="Trace JSON")
         return cls(n0=d["n0"], capacity=d["capacity"], dist=d["dist"],
                    seed=d["seed"], name=d.get("name", "trace"),
                    events=[Event.from_dict(e) for e in d["events"]])
@@ -201,10 +201,44 @@ def straggler_storm(n0: int = 40, dist: str = "gaussian", seed: int = 0, *,
                  events=events, name="straggler_storm")
 
 
+def merge_traces(*traces: Trace, name: str | None = None) -> Trace:
+    """Superimpose traces that share a latency world (n0/dist/seed must
+    agree): events are merged in time order, capacity is the max.  This is
+    how compound workloads (e.g. churn + drift) are assembled without a
+    bespoke generator per combination."""
+    if not traces:
+        raise ValueError("merge_traces needs at least one trace")
+    first = traces[0]
+    for t in traces[1:]:
+        if (t.n0, t.dist, t.seed) != (first.n0, first.dist, first.seed):
+            raise ValueError(
+                f"traces disagree on the latency world: "
+                f"{(t.n0, t.dist, t.seed)} vs {(first.n0, first.dist, first.seed)}")
+    events = sorted((e for t in traces for e in t.events), key=lambda e: e.time)
+    return Trace(n0=first.n0, capacity=max(t.capacity for t in traces),
+                 dist=first.dist, seed=first.seed, events=events,
+                 name=name or "+".join(t.name for t in traces))
+
+
+def churn_with_drift(n0: int = 40, dist: str = "bitnode", seed: int = 0, *,
+                     horizon: float = 30_000.0, join_rate: float = 0.4e-3,
+                     leave_rate: float = 0.4e-3, drift_steps: int = 6,
+                     amplitude: float = 0.3) -> Trace:
+    """The service benchmark's compound workload: memoryless join/leave
+    churn superimposed on a diurnal latency cycle — membership changes keep
+    arriving while every link's weight is drifting underneath them."""
+    churn = poisson_churn(n0, dist, seed, horizon=horizon,
+                          join_rate=join_rate, leave_rate=leave_rate)
+    drift = diurnal_drift(n0, dist, seed, period=horizon,
+                          steps=drift_steps, amplitude=amplitude)
+    return merge_traces(churn, drift, name="churn_with_drift")
+
+
 SCENARIOS: Dict[str, Callable[..., Trace]] = {
     "poisson_churn": poisson_churn,
     "flash_crowd": flash_crowd,
     "regional_failure": regional_failure,
     "diurnal_drift": diurnal_drift,
     "straggler_storm": straggler_storm,
+    "churn_with_drift": churn_with_drift,
 }

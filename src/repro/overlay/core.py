@@ -31,7 +31,6 @@ maintains).
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -39,6 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import serde
 from repro.core import batcheval
 from repro.core.diameter import (INF, adjacency_from_edges, is_edge,
                                  largest_cc_diameter, ring_edges)
@@ -245,21 +245,23 @@ class Overlay:
 
         ``from_json`` rebuilds the identical Overlay (adjacency re-derived),
         so churn traces and benchmark artifacts can record the overlay they
-        started from next to the events they replayed.
+        started from next to the events they replayed.  The payload carries
+        the repo-wide ``"schema"`` field (``repro.serde``); the historical
+        ``"version": 1`` field is kept so pre-schema readers still load it.
         """
-        return json.dumps({
+        return serde.dumps({
             "version": 1,
             "policy": self.policy,
             "n": self.n,
             "w": [[float(x) for x in row] for row in self.w],
             "rings": [[int(x) for x in p] for p in self.rings],
             "extra_edges": [[int(u), int(v)] for u, v in self.extra_edges],
-        }, indent=None, sort_keys=True)
+        }, indent=None)
 
     @classmethod
     def from_json(cls, s: str) -> "Overlay":
-        d = json.loads(s)
-        if d.get("version") != 1:
+        d = serde.loads(s, what="Overlay JSON")
+        if d.get("version", 1) != 1:
             raise ValueError(f"unknown Overlay JSON version {d.get('version')!r}")
         return cls(np.asarray(d["w"], np.float32),
                    _as_ring_tuple(d["rings"]),

@@ -1,0 +1,62 @@
+"""Versioned JSON payloads — the repo's serialization contract.
+
+Every durable JSON surface (``Overlay.to_json``, ``Trace.to_json``, the
+``repro.service`` API envelopes and its checkpoint snapshots) carries a
+``"schema"`` field so readers can refuse payloads from a *future* writer
+instead of mis-parsing them.  The rules:
+
+* writers stamp ``"schema": SCHEMA_VERSION`` (currently 1);
+* readers accept any schema ``<= SCHEMA_VERSION`` — including payloads
+  with NO schema field at all (everything serialized before this module
+  existed is schema-1 by definition);
+* readers reject unknown *future* schemas with a :class:`SchemaError`
+  naming both versions, so a v1 daemon fed a v2 snapshot fails loudly at
+  the boundary rather than deep inside array parsing.
+
+``dumps``/``check_schema`` are deliberately tiny — the point is that every
+surface shares ONE version constant and ONE rejection message, not that
+serialization itself is abstracted away.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict
+
+__all__ = ["SCHEMA_VERSION", "SchemaError", "check_schema", "dumps", "loads"]
+
+SCHEMA_VERSION = 1
+
+
+class SchemaError(ValueError):
+    """Payload written by a newer (unknown) schema than this reader."""
+
+
+def check_schema(d: Dict[str, Any], what: str = "payload") -> Dict[str, Any]:
+    """Validate ``d``'s schema field and return ``d``.
+
+    Version-absent payloads are legacy schema-1; anything newer than
+    :data:`SCHEMA_VERSION` raises :class:`SchemaError`.
+    """
+    v = d.get("schema", 1)
+    if not isinstance(v, int) or v < 1:
+        raise SchemaError(f"{what} has malformed schema field {v!r}")
+    if v > SCHEMA_VERSION:
+        raise SchemaError(
+            f"{what} uses schema {v}, but this reader only understands "
+            f"<= {SCHEMA_VERSION}; upgrade the reader (or re-export the "
+            f"payload from the older writer)")
+    return d
+
+
+def dumps(d: Dict[str, Any], **kw) -> str:
+    """``json.dumps`` with the current schema stamped in."""
+    kw.setdefault("sort_keys", True)
+    return json.dumps({**d, "schema": SCHEMA_VERSION}, **kw)
+
+
+def loads(s: str, what: str = "payload") -> Dict[str, Any]:
+    """``json.loads`` + :func:`check_schema`."""
+    d = json.loads(s)
+    if not isinstance(d, dict):
+        raise SchemaError(f"{what} must be a JSON object, got {type(d).__name__}")
+    return check_schema(d, what)

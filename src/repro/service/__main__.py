@@ -1,0 +1,4 @@
+"""``python -m repro.service`` — run the control-plane daemon."""
+from .server import main
+
+main()

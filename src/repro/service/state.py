@@ -1,0 +1,394 @@
+"""The control plane's live state: one lock, one engine, one served Overlay.
+
+:class:`ServiceState` owns
+
+* a :class:`~repro.dynamics.engine.ChurnEngine` ingesting Trace-format
+  events through the live :meth:`~repro.dynamics.engine.ChurnEngine.process`
+  path (SWIM-confirmed failures, splice joins, tombstoned leaves — exactly
+  the replay semantics, fed one event at a time);
+* the **served Overlay** — a lazily-rebuilt, immutable
+  :class:`~repro.overlay.Overlay` snapshot of the live sub-fleet.  The
+  async re-optimizer computes its candidate on a *frozen copy* (the second
+  buffer) and :meth:`commit_reopt` swaps the result in under the lock in
+  O(ring) relaxations — queries never wait on the optimization itself;
+* the snapshot cadence for crash recovery (``repro.service.snapshots``).
+
+Staleness contract (inherited from ``dynamics.incremental``): between
+deletion-triggered rebuilds the distance matrix is an elementwise LOWER
+bound on the live truth, so every distance the API serves is either exact
+(``pending_deletions == 0``) or a provable lower bound — never an
+overestimate.  ``/v1/stats`` exposes which.
+
+Locking: one ``RLock`` over engine mutations and reads.  Every query is
+O(C) – O(C^2) numpy work; the only expensive operations are the explicit
+``exact=True`` diameter refresh and the re-optimizer's candidate scoring,
+which runs outside the lock by design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time as _time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.diameter import INF, is_edge
+from repro.dynamics.engine import POLICIES, ChurnEngine
+from repro.dynamics.scenarios import Event, Trace
+from repro.overlay import Overlay
+
+from . import snapshots as snaps
+
+__all__ = ["ServiceState", "ReoptJob"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReoptJob:
+    """A frozen copy of the live fleet for the background optimizer: the
+    second overlay buffer.  ``version`` records the swap generation the copy
+    was taken at (informational — commit reconciles against the CURRENT
+    alive set, so a stale job is still safe to land)."""
+    live: np.ndarray          # global slot ids, ascending
+    overlay: Overlay          # live-subfleet overlay (local indexing)
+    version: int
+
+
+class ServiceState:
+    """Lock-guarded live overlay + distance state behind the /v1 API."""
+
+    def __init__(self, engine: ChurnEngine, *, policy_name: str,
+                 snapshot_dir: Optional[str] = None, keep_snapshots: int = 3,
+                 version: int = 0, events_ingested: int = 0,
+                 snapshot_seq: int = 0):
+        self.lock = threading.RLock()
+        self.engine = engine
+        self.policy_name = policy_name
+        self.snapshot_dir = snapshot_dir
+        self.keep_snapshots = keep_snapshots
+        self.version = version                  # bumped on every reopt swap
+        self.events_ingested = events_ingested  # externally submitted events
+        self.queries_served = 0
+        self.reopts_completed = 0
+        self.reopts_kept = 0                    # adapt said "keep"
+        self.snapshot_seq = snapshot_seq
+        self.events_since_snapshot = 0
+        self.events_since_reopt = 0
+        self.started_at = _time.time()
+        self._overlay: Optional[Overlay] = None
+        self._overlay_live: Optional[np.ndarray] = None
+
+    # -- constructors -----------------------------------------------------
+
+    @classmethod
+    def fresh(cls, world: Trace, *, policy: str = "dgro",
+              k_rings: Optional[int] = None, detect_failures: bool = True,
+              rebuild_threshold: int = 8, seed: int = 0,
+              snapshot_dir: Optional[str] = None,
+              keep_snapshots: int = 3) -> "ServiceState":
+        """Boot from a world spec (a :class:`Trace`; its events, if any, are
+        ignored — the service ingests events over the API).
+
+        The policy's *inline* self-repair cadence is disabled for DGRO: in
+        the service the re-optimizer owns adaptation, asynchronously, so an
+        ingest never blocks on ring selection.
+        """
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; options {sorted(POLICIES)}")
+        kw: Dict = {}
+        if policy in ("dgro", "rapid"):
+            kw["k_rings"] = k_rings
+        if policy == "dgro":
+            kw["adapt_every"] = 2**31          # async reopt replaces inline
+        pol = POLICIES[policy](**kw)
+        engine = ChurnEngine(
+            Trace(n0=world.n0, capacity=world.capacity, dist=world.dist,
+                  seed=world.seed, events=[], name=world.name),
+            pol, detect_failures=detect_failures,
+            rebuild_threshold=rebuild_threshold, seed=seed)
+        return cls(engine, policy_name=policy, snapshot_dir=snapshot_dir,
+                   keep_snapshots=keep_snapshots)
+
+    @classmethod
+    def restore(cls, snapshot_dir: str, *,
+                keep_snapshots: int = 3) -> "ServiceState":
+        """Recover from the newest committed snapshot (crash restart).
+
+        The distance matrix is recomputed exactly from the snapshot
+        adjacency, so the restored service starts torn-state-free: it serves
+        precisely the overlay the snapshot committed, and nothing newer.
+        """
+        found = snaps.latest_snapshot(snapshot_dir)
+        if found is None:
+            raise FileNotFoundError(
+                f"no committed service snapshot under {snapshot_dir}")
+        seq, p = found
+        wd = p["world"]
+        world = Trace(n0=wd["n0"], capacity=wd["capacity"], dist=wd["dist"],
+                      seed=wd["seed"], events=[], name=wd.get("name", "world"))
+        c = world.capacity
+        pol = POLICIES[p["policy"]]()
+        pol.rings = [list(map(int, ring)) for ring in p["policy_rings"]]
+        if p["policy"] == "dgro":
+            pol.adapt_every = 2**31
+        w = np.asarray(p["w"], np.float32)
+        adj = np.full((c, c), float(INF), np.float32)
+        np.fill_diagonal(adj, 0.0)
+        for u, v, wt in p["edges"]:
+            adj[int(u), int(v)] = adj[int(v), int(u)] = np.float32(wt)
+        alive = np.zeros(c, bool)
+        alive[np.asarray(p["alive"], np.intp)] = True
+        engine = ChurnEngine.restore(
+            world, pol, w=w, adj=adj, alive=alive,
+            latency_factor=np.asarray(p["latency_factor"], np.float32),
+            drift_scale=np.asarray(p["drift_scale"], np.float32),
+            clock=p["time"], events_processed=p["events_processed"],
+            detect_failures=p["detect_failures"],
+            rebuild_threshold=p["rebuild_threshold"], seed=p["seed"])
+        state = cls(engine, policy_name=p["policy"],
+                    snapshot_dir=snapshot_dir, keep_snapshots=keep_snapshots,
+                    version=p["version"], events_ingested=p["events_ingested"],
+                    snapshot_seq=seq)
+        return state
+
+    @classmethod
+    def open(cls, world: Trace, snapshot_dir: Optional[str] = None,
+             **fresh_kw) -> "ServiceState":
+        """Restore if a committed snapshot exists, else boot fresh."""
+        if snapshot_dir and snaps.latest_snapshot(snapshot_dir) is not None:
+            return cls.restore(snapshot_dir,
+                               keep_snapshots=fresh_kw.get("keep_snapshots", 3))
+        return cls.fresh(world, snapshot_dir=snapshot_dir, **fresh_kw)
+
+    # -- ingest -----------------------------------------------------------
+
+    def ingest(self, events: Sequence[Event]) -> Dict:
+        """Apply externally-arriving events in order.  Events applied before
+        a failure stay applied (the caller sees the index that failed)."""
+        applied = 0
+        with self.lock:
+            for i, e in enumerate(events):
+                try:
+                    applied += self.engine.process(e)
+                except ValueError as err:
+                    raise ValueError(
+                        f"event {i} ({e.kind} t={e.time}) rejected after "
+                        f"{applied} applied: {err}") from err
+            self.events_ingested += len(events)
+            self.events_since_snapshot += len(events)
+            self.events_since_reopt += len(events)
+            self._overlay = None
+            return {"accepted": len(events), "applied": applied,
+                    "clock": self.engine.clock, "n_live": self.engine.inc.n_live,
+                    "pending_confirmations": self.engine.pending_confirmations,
+                    "version": self.version}
+
+    # -- queries ----------------------------------------------------------
+
+    def _count_query(self) -> None:
+        self.queries_served += 1
+
+    def stats(self) -> Dict:
+        with self.lock:
+            self._count_query()
+            inc = self.engine.inc
+            return {
+                "policy": self.policy_name,
+                "version": self.version,
+                "clock": self.engine.clock,
+                "n_live": inc.n_live,
+                "capacity": inc.capacity,
+                "events_ingested": self.events_ingested,
+                "events_processed": self.engine.events_processed,
+                "pending_confirmations": self.engine.pending_confirmations,
+                "pending_deletions": inc.pending_deletions,
+                "distances_are": ("exact" if inc.pending_deletions == 0
+                                  else "lower-bound"),
+                "maintenance": dict(inc.stats),
+                "reopts_completed": self.reopts_completed,
+                "reopts_kept": self.reopts_kept,
+                "queries_served": self.queries_served,
+                "snapshot_seq": self.snapshot_seq,
+                "uptime_s": _time.time() - self.started_at,
+            }
+
+    def diameter(self, exact: bool = False) -> Dict:
+        with self.lock:
+            self._count_query()
+            inc = self.engine.inc
+            d = inc.diameter(exact=exact)
+            return {"diameter": d,
+                    "exact": bool(exact or inc.pending_deletions == 0),
+                    "pending_deletions": inc.pending_deletions,
+                    "n_live": inc.n_live, "version": self.version}
+
+    def route(self, src: int, dst: int) -> Dict:
+        """Distance + greedy next-hop path from the maintained matrix.
+
+        The distance is exact when no deletions are pending, otherwise a
+        provable lower bound.  The path is reconstructed by greedy next-hop
+        descent over ``adj[u, v] + D[v, dst]``; under a stale matrix the
+        descent can dead-end, in which case ``path`` is ``None`` and only
+        the distance bound is served.
+        """
+        with self.lock:
+            self._count_query()
+            inc = self.engine.inc
+            for name, u in (("src", src), ("dst", dst)):
+                if not 0 <= u < inc.capacity:
+                    raise ValueError(f"{name}={u} outside capacity "
+                                     f"[0, {inc.capacity})")
+                if not inc.alive[u]:
+                    raise ValueError(f"{name}={u} is not a live node")
+            D = inc.distances
+            adj = inc.adj
+            d = float(D[src, dst])
+            reachable = d < float(INF) / 2
+            stale = inc.pending_deletions > 0
+            path: Optional[List[int]] = None
+            if reachable:
+                hops = [src]
+                u, visited = src, {src}
+                while u != dst and len(hops) <= inc.n_live:
+                    nbrs = [int(v) for v in np.flatnonzero(is_edge(adj[u]))
+                            if int(v) not in visited]
+                    if not nbrs:
+                        break
+                    v = min(nbrs, key=lambda x: float(adj[u, x] + D[x, dst]))
+                    if float(adj[u, v] + D[v, dst]) >= float(INF) / 2:
+                        break
+                    hops.append(v)
+                    visited.add(v)
+                    u = v
+                if u == dst:
+                    path = hops
+            return {"src": src, "dst": dst,
+                    "distance": d if reachable else None,
+                    "reachable": reachable, "stale": stale,
+                    "bound": "lower" if stale else "exact",
+                    "path": path, "version": self.version}
+
+    def adjacency(self) -> Dict:
+        with self.lock:
+            self._count_query()
+            inc = self.engine.inc
+            live = inc.live_ids()
+            sub = inc.adj[np.ix_(live, live)]
+            ii, jj = np.nonzero(np.triu(np.asarray(is_edge(sub)), 1))
+            edges = [[int(live[i]), int(live[j]), float(sub[i, j])]
+                     for i, j in zip(ii, jj)]
+            return {"nodes": [int(u) for u in live], "edges": edges,
+                    "n_live": int(len(live)), "version": self.version}
+
+    # -- the served Overlay (double buffer A) -----------------------------
+
+    def overlay(self) -> "tuple[Overlay, np.ndarray]":
+        """(served Overlay over the live sub-fleet, global slot ids).
+
+        Rebuilt lazily after mutations; the rebuilt object is immutable, so
+        handing it out of the lock is safe.
+        """
+        with self.lock:
+            if self._overlay is None:
+                live = self.engine.inc.live_ids().copy()
+                wl = self.engine.w[np.ix_(live, live)]
+                adjl = self.engine.inc.adj[np.ix_(live, live)]
+                self._overlay = Overlay.from_adjacency(
+                    wl, adjl, policy=self.policy_name, fold_weights=True)
+                self._overlay_live = live
+            return self._overlay, self._overlay_live
+
+    # -- re-optimization (double buffer B) --------------------------------
+
+    def capture(self) -> ReoptJob:
+        """Freeze a copy of the live fleet for the background optimizer."""
+        with self.lock:
+            live = self.engine.inc.live_ids().copy()
+            wl = self.engine.w[np.ix_(live, live)].copy()
+            adjl = self.engine.inc.adj[np.ix_(live, live)].copy()
+            version = self.version
+        # Overlay construction is O(C^2) validation — outside the lock
+        ov = Overlay.from_adjacency(wl, adjl, policy=self.policy_name,
+                                    fold_weights=True)
+        return ReoptJob(live=live, overlay=ov, version=version)
+
+    def commit_reopt(self, job: ReoptJob, new_overlay: Overlay) -> Dict:
+        """Atomically swap the optimized overlay in.
+
+        The candidate was computed on ``job``'s frozen copy; membership may
+        have moved on since, so the merge applies the candidate's NEW edges
+        only between still-live nodes, as exact incremental relaxations
+        (distances only improve — the staleness lower bound is preserved).
+        One lock acquisition covers relax + version bump + served-overlay
+        swap, so a query sees either the old topology or the new one,
+        never a half-merged state.
+        """
+        new_edges = np.argwhere(np.triu(
+            np.asarray(is_edge(new_overlay.adjacency))
+            & ~np.asarray(is_edge(job.overlay.adjacency)), 1))
+        with self.lock:
+            alive = self.engine.alive
+            applied = 0
+            for i, j in new_edges:
+                u, v = int(job.live[i]), int(job.live[j])
+                if alive[u] and alive[v]:
+                    self.engine.inc.add_edge(
+                        u, v, float(new_overlay.adjacency[i, j]))
+                    applied += 1
+            self.version += 1
+            self.reopts_completed += 1
+            self.events_since_reopt = 0
+            self._overlay = None             # next overlay() serves buffer B
+            return {"version": self.version, "edges_added": applied,
+                    "edges_proposed": int(len(new_edges))}
+
+    # -- snapshots --------------------------------------------------------
+
+    def snapshot_payload(self) -> Dict:
+        """Full capacity-level state as a serde-versioned dict.  Refreshes
+        pending deletions first so the recorded diameter is exact — the
+        restart-consistency invariant the fig17 gate checks."""
+        with self.lock:
+            eng = self.engine
+            inc = eng.inc
+            inc.refresh()
+            live = inc.live_ids()
+            sub_is_edge = np.triu(np.asarray(is_edge(inc.adj)), 1)
+            ii, jj = np.nonzero(sub_is_edge)
+            return {
+                "kind": "service_snapshot",
+                "time": eng.clock,
+                "events_processed": eng.events_processed,
+                "events_ingested": self.events_ingested,
+                "version": self.version,
+                "policy": self.policy_name,
+                "policy_rings": [[int(u) for u in ring]
+                                 for ring in getattr(eng.policy, "rings", [])],
+                "world": {"n0": eng.trace.n0, "capacity": eng.trace.capacity,
+                          "dist": eng.trace.dist, "seed": eng.trace.seed,
+                          "name": eng.trace.name},
+                "w": [[float(x) for x in row] for row in inc.w],
+                "latency_factor": [float(x) for x in eng.latency_factor],
+                "drift_scale": [float(x) for x in eng.drift_scale],
+                "alive": [int(u) for u in live],
+                "edges": [[int(u), int(v), float(inc.adj[u, v])]
+                          for u, v in zip(ii, jj)],
+                "diameter": inc.diameter(),
+                "detect_failures": eng.detect_failures,
+                "rebuild_threshold": inc.rebuild_threshold,
+                "seed": 0,
+            }
+
+    def write_snapshot(self, reason: str = "periodic") -> Optional[str]:
+        """Atomic-commit a snapshot (no-op without a snapshot dir)."""
+        if not self.snapshot_dir:
+            return None
+        payload = self.snapshot_payload()
+        payload["reason"] = reason
+        with self.lock:
+            self.snapshot_seq += 1
+            seq = self.snapshot_seq
+            self.events_since_snapshot = 0
+        return snaps.write_snapshot(self.snapshot_dir, seq, payload,
+                                    keep=self.keep_snapshots)

@@ -235,22 +235,20 @@ def test_from_adjacency_roundtrip_and_mismatch_rejected():
     assert np.array_equal(folded.w[~mask], np.asarray(w)[~mask])
 
 
-def test_adapt_overlay_shim_tolerates_custom_edge_weights():
-    """The legacy adapt_overlay contract accepted adjacencies whose edge
-    weights were set away from w (IncrementalDistances.add_edge(weight=...));
-    the Overlay-backed shim must keep doing so."""
-    import warnings
-
+def test_adapt_with_folded_weights_tolerates_custom_edge_weights():
+    """Adjacencies whose edge weights deviate from w (e.g. after
+    IncrementalDistances.add_edge(weight=...)) adapt fine when folded into
+    an Overlay via fold_weights=True — the path the removed adapt_overlay
+    shim used to provide."""
     from repro.core import selection
     from repro.core.diameter import adjacency_from_rings
 
     w = make_latency("uniform", 16, seed=0)
     adj = adjacency_from_rings(w, [np.random.default_rng(0).permutation(16)])
     adj[0, 5] = adj[5, 0] = 0.25               # cheaper than w[0, 5]
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        new_adj, kind, rho = selection.adapt_overlay(w, adj, seed=0)
-    assert new_adj[0, 5] == np.float32(0.25)   # custom weight survives
+    ov = overlay.Overlay.from_adjacency(w, adj, fold_weights=True)
+    new_ov, kind, rho = selection.adapt(ov, seed=0)
+    assert new_ov.adjacency[0, 5] == np.float32(0.25)  # custom weight survives
     assert kind in ("nearest", "random", "keep")
 
 
@@ -274,34 +272,29 @@ def test_degree_stats_and_edge_list():
 
 
 # ---------------------------------------------------------------------------
-# legacy shims (satellite: deprecation exactly once)
+# legacy shims (satellite: tuple facades removed, hard error with pointer)
 # ---------------------------------------------------------------------------
 
-def test_legacy_shims_warn_exactly_once_per_process():
-    """Run the CI checker in a fresh interpreter: each tuple shim emits
-    DeprecationWarning on first use only."""
+def test_legacy_shims_are_removed_with_pointer():
+    """Run the CI checker in a fresh interpreter: every tuple shim is gone
+    and raises AttributeError naming the overlay API replacement."""
     out = subprocess.run(
         [sys.executable, "tools/check_deprecation.py"], capture_output=True,
         text=True, env=subproc_env(), cwd=".", timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "all legacy shims warn exactly once" in out.stdout
+    assert "all legacy shims removed" in out.stdout
 
 
-def test_legacy_shims_match_registry_builders():
-    """The tuple facades return exactly what the registry builds."""
-    import warnings
+def test_removed_shims_raise_attributeerror_inline():
+    """Direct access (not just the subprocess checker) fails with directions."""
+    from repro.core import protocols, qlearning, selection
 
-    from repro.core import protocols
-
-    w = make_latency("bitnode", N, seed=2)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        for shim, name, cfg in [
-                (lambda r: protocols.chord(w, r), "chord", None),
-                (lambda r: protocols.rapid(w, r), "rapid", None),
-                (lambda r: protocols.perigee(w, r), "perigee", None)]:
-            adj, rings = shim(np.random.default_rng(5))
-            ov = overlay.build(name, w, cfg, rng=np.random.default_rng(5))
-            assert np.array_equal(adj, ov.adjacency), name
-            assert all(np.array_equal(a, b)
-                       for a, b in zip(rings, ov.rings)), name
+    for module, name in [(protocols, "chord"),
+                         (protocols, "with_replaced_rings"),
+                         (selection, "adapt_overlay"),
+                         (qlearning, "dgro_topology")]:
+        with pytest.raises(AttributeError, match="removed.*overlay"):
+            getattr(module, name)
+    # unknown names still produce the stock message, not the removal hint
+    with pytest.raises(AttributeError, match="has no attribute"):
+        protocols.definitely_not_a_protocol

@@ -1,65 +1,69 @@
-"""CI check: legacy tuple shims emit DeprecationWarning exactly once.
+"""CI check: the legacy tuple shims are GONE, and fail loudly with a pointer.
 
-Each deprecated facade over the ``repro.overlay`` API (protocols.chord /
+The deprecated facades over the ``repro.overlay`` API (protocols.chord /
 rapid / perigee / with_replaced_rings, selection.adapt_overlay,
-qlearning.dgro_topology) must warn on first use and stay silent on repeated
-use — one actionable nudge per process, no log spam in tight loops.
+qlearning.dgro_topology) spent two PR cycles emitting DeprecationWarning and
+are now removed.  Touching one must raise ``AttributeError`` whose message
+names the ``overlay.build``-era replacement — a hard stop with directions,
+not a silent AttributeError from a missing name.
 
     PYTHONPATH=src python tools/check_deprecation.py
 """
 from __future__ import annotations
 
-import warnings
+from repro.core import protocols, qlearning, selection
 
-import numpy as np
+REMOVED = [
+    (protocols, "chord"),
+    (protocols, "rapid"),
+    (protocols, "perigee"),
+    (protocols, "with_replaced_rings"),
+    (selection, "adapt_overlay"),
+    (qlearning, "dgro_topology"),
+]
 
-from repro.core import protocols, selection
-from repro.core.topology import make_latency
+# every removal message must point at the Overlay API
+_POINTER = "overlay."
 
 
-def check(label, fn):
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")     # count raw emissions, no dedup
-        fn()
-        fn()
-    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
-    assert len(dep) == 1, (
-        f"{label}: expected exactly 1 DeprecationWarning over two calls, "
-        f"got {len(dep)}: {[str(d.message) for d in dep]}")
-    assert "deprecated" in str(dep[0].message), dep[0].message
-    print(f"OK  {label}: warned exactly once -> {str(dep[0].message)[:72]}...")
+def check_removed(module, name: str) -> None:
+    label = f"{module.__name__}.{name}"
+    try:
+        getattr(module, name)
+    except AttributeError as e:
+        msg = str(e)
+        assert "removed" in msg, (
+            f"{label}: AttributeError should say the name was removed, "
+            f"got: {msg}")
+        assert _POINTER in msg, (
+            f"{label}: AttributeError must point at the overlay API "
+            f"replacement, got: {msg}")
+        print(f"OK  {label}: gone -> {msg[:84]}...")
+        return
+    raise AssertionError(f"{label} is still importable; the shim should "
+                         f"have been removed")
+
+
+def check_survivors() -> None:
+    # the non-deprecated names stayed behind
+    import numpy as np
+
+    from repro.core.diameter import INF
+
+    w = np.array([[0.0, 1.0], [1.0, 0.0]])
+    adj = np.array([[0.0, 1.0], [1.0, 0.0]])
+    deg = protocols.node_degrees(np.where(adj > 0, adj, INF))
+    assert list(deg) == [1, 1], deg
+    assert callable(selection.adapt)
+    assert callable(qlearning.dgro_overlay)
+    print("OK  survivors: node_degrees / selection.adapt / dgro_overlay")
 
 
 def main():
-    w = make_latency("uniform", 16, seed=0)
-    rng = np.random.default_rng(0)
-    adj, rings = None, None
-
-    def chord():
-        nonlocal adj, rings
-        adj, rings = protocols.chord(w, np.random.default_rng(0))
-
-    check("protocols.chord", chord)
-    check("protocols.rapid", lambda: protocols.rapid(w, rng, k=2))
-    check("protocols.perigee", lambda: protocols.perigee(w, rng))
-    check("protocols.with_replaced_rings",
-          lambda: protocols.with_replaced_rings(
-              w, np.asarray(adj), rings, [np.random.default_rng(1).permutation(16)]))
-    check("selection.adapt_overlay",
-          lambda: selection.adapt_overlay(w, adj, seed=0))
-
-    # the DQN shim warns too (untrained params: the facade, not the policy,
-    # is under test)
-    import jax
-
-    from repro.core.embedding import init_qparams
-    from repro.core.qlearning import DQNConfig, dgro_topology
-
-    cfg = DQNConfig(n=8, k_rings=1)
-    params = init_qparams(jax.random.PRNGKey(0), cfg.p, cfg.h)
-    check("qlearning.dgro_topology",
-          lambda: dgro_topology(params, cfg, w[:8, :8], n_starts=1))
-    print("all legacy shims warn exactly once")
+    for module, name in REMOVED:
+        check_removed(module, name)
+    check_survivors()
+    print("all legacy shims removed; AttributeError points at overlay API")
 
 
 if __name__ == "__main__":

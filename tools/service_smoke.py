@@ -1,0 +1,100 @@
+"""CI smoke: boot the control-plane daemon, stream a churn trace, shut down.
+
+Starts ``python -m repro.service.server`` as a real subprocess, streams a
+50-event poisson-churn trace through :class:`repro.service.ServiceClient`,
+asserts every query endpoint answers sensibly, forces a re-optimization and
+a snapshot, and checks the daemon exits cleanly on ``POST /v1/shutdown``.
+
+    PYTHONPATH=src python tools/service_smoke.py [--events 50] [--n0 32]
+
+Run under both ``JAX_PLATFORMS=cpu`` and the default platform in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.dynamics.scenarios import poisson_churn  # noqa: E402
+from repro.service import ServiceClient  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=50)
+    ap.add_argument("--n0", type=int, default=32)
+    ap.add_argument("--dist", default="bitnode")
+    ap.add_argument("--timeout", type=float, default=120.0)
+    args = ap.parse_args()
+
+    # a trace with >= the requested number of events (rates scale with count)
+    trace = poisson_churn(n0=args.n0, dist=args.dist, seed=1,
+                          horizon=30_000.0,
+                          join_rate=args.events / 2 / 30_000.0,
+                          leave_rate=args.events / 2 / 30_000.0)
+    events = sorted(trace.events, key=lambda e: e.time)[:args.events]
+    assert len(events) >= min(args.events, 40), (
+        f"trace only produced {len(events)} events")
+
+    snapdir = tempfile.mkdtemp(prefix="dgro-service-smoke-")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.service",
+         "--n0", str(args.n0), "--capacity", str(trace.capacity),
+         "--dist", args.dist, "--port", "0", "--snapshot-dir", snapdir,
+         "--reopt-every", "16", "--snapshot-every", "25"],
+        stdout=subprocess.PIPE, text=True,
+        env={**os.environ, "PYTHONPATH": "src"})
+    try:
+        line = proc.stdout.readline().strip()
+        assert line.startswith("SERVING "), f"unexpected boot line: {line!r}"
+        port = dict(kv.split("=") for kv in line.split()[1:])["port"]
+        c = ServiceClient(f"http://127.0.0.1:{port}")
+
+        health = c.wait_ready(timeout=args.timeout)
+        assert health["status"] == "ok" and "v1" in health["api_versions"]
+
+        d0 = c.diameter()
+        assert d0["diameter"] > 0 and d0["n_live"] == args.n0
+
+        for i in range(0, len(events), 10):
+            res = c.post_events(events[i:i + 10])
+            assert res["applied"] >= res["accepted"] > 0, res
+
+        st = c.stats()
+        assert st["events_ingested"] == len(events), st
+        assert st["n_live"] >= 4
+        assert st["distances_are"] in ("exact", "lower-bound")
+
+        nodes = c.adjacency()["nodes"]
+        assert len(nodes) == st["n_live"]
+        r = c.route(nodes[0], nodes[-1])
+        assert r["reachable"] and r["distance"] > 0
+        assert r["path"] is None or (r["path"][0] == nodes[0]
+                                     and r["path"][-1] == nodes[-1])
+
+        c.reoptimize()
+        snap = c.snapshot()
+        assert snap["seq"] >= 1, snap
+        d1 = c.diameter(exact=True)
+        assert d1["exact"] and d1["diameter"] > 0
+
+        c.shutdown()
+        rc = proc.wait(timeout=30)
+        assert rc == 0, f"daemon exited {rc}"
+        out = proc.stdout.read()
+        assert "STOPPED" in out, out
+        print(f"OK  service smoke: {len(events)} events streamed, "
+              f"n_live={st['n_live']}, diameter={d1['diameter']:.1f}, "
+              f"clean shutdown")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    main()
