@@ -3,6 +3,9 @@ from __future__ import annotations
 
 import time
 from contextlib import contextmanager
+from typing import Dict, Iterable
+
+from repro.obs.metrics import LATENCY_BUCKETS_S, Histogram
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -17,3 +20,20 @@ def timed():
     yield t
     t["s"] = time.perf_counter() - t0
     t["us"] = t["s"] * 1e6
+
+
+def latency_histogram(name: str = "bench_latency_seconds") -> Histogram:
+    """Standalone (unregistered) histogram with the service's latency
+    buckets — BENCH JSON artifacts and the live ``/v1/metrics`` endpoint
+    summarize through the exact same bucket/quantile implementation."""
+    return Histogram(name, "benchmark-local latency samples",
+                     buckets=LATENCY_BUCKETS_S)
+
+
+def latency_summary(samples_s: Iterable[float]) -> Dict[str, float]:
+    """count/sum/p50/p90/p99 of per-call latencies (seconds) via
+    :class:`repro.obs.metrics.Histogram` — the shape BENCH JSON embeds."""
+    h = latency_histogram()
+    for s in samples_s:
+        h.observe(float(s))
+    return h.summary()

@@ -234,6 +234,7 @@ def diameters(adjs: np.ndarray, *, use_kernel: bool = False,
     ``batched_diameter``; larger ones are padded to a multiple of ``chunk``
     and folded through a ``lax.map`` so memory stays bounded.
     """
+    from repro.obs import jit_span
     adjs = np.asarray(adjs, dtype=np.float32)
     assert adjs.ndim == 3 and adjs.shape[1] == adjs.shape[2], adjs.shape
     b, n = adjs.shape[0], adjs.shape[-1]
@@ -241,15 +242,20 @@ def diameters(adjs: np.ndarray, *, use_kernel: bool = False,
         return np.zeros((0,), np.float32)
     chunk = chunk or default_chunk(n, _resolve_method(use_kernel, method))
     if b <= chunk:
-        out = batched_diameter(jnp.asarray(adjs), use_kernel=use_kernel,
-                               method=method, symmetric=symmetric)
+        with jit_span("batcheval.diameters",
+                      key=(b, n, use_kernel, method, symmetric)):
+            out = batched_diameter(jnp.asarray(adjs), use_kernel=use_kernel,
+                                   method=method, symmetric=symmetric)
         return np.asarray(out)
     pad = (-b) % chunk
     if pad:
         adjs = np.concatenate([adjs, np.repeat(adjs[:1], pad, axis=0)], axis=0)
     stack = adjs.reshape(-1, chunk, n, n)
-    out = _batched_diameter_chunked(jnp.asarray(stack), use_kernel=use_kernel,
-                                    method=method, symmetric=symmetric)
+    with jit_span("batcheval.diameters",
+                  key=("chunked", chunk, n, use_kernel, method, symmetric)):
+        out = _batched_diameter_chunked(jnp.asarray(stack),
+                                        use_kernel=use_kernel,
+                                        method=method, symmetric=symmetric)
     return np.asarray(out).reshape(-1)[:b]
 
 

@@ -260,11 +260,30 @@ def _reset_ring(ring_start, start_t, visited, v, cur_start, pad_mask=None):
 # public engine entry points
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k_rings", "n_rounds"))
 def rollout_episodes(params: QParams, w_batch: jnp.ndarray,
                      starts: jnp.ndarray, eps_u: jnp.ndarray,
                      choice_u: jnp.ndarray, eps, alpha, *,
                      k_rings: int, n_rounds: int = 3, sizes=None):
+    """Build K rings in each of E environments — ONE device call.
+
+    (Host wrapper: the jit'd engine is ``_rollout_episodes_jit``; this
+    shim times each call through ``repro.obs``'s JIT-aware span, keyed by
+    the retrace-triggering shape/static args, so the first-call compile
+    and the steady-state execute land in separate histograms.)
+    """
+    from repro.obs import jit_span
+    key = (tuple(w_batch.shape), k_rings, n_rounds, sizes is None)
+    with jit_span("rollout.rollout_episodes", key=key):
+        return _rollout_episodes_jit(
+            params, w_batch, starts, eps_u, choice_u, eps, alpha,
+            k_rings=k_rings, n_rounds=n_rounds, sizes=sizes)
+
+
+@functools.partial(jax.jit, static_argnames=("k_rings", "n_rounds"))
+def _rollout_episodes_jit(params: QParams, w_batch: jnp.ndarray,
+                          starts: jnp.ndarray, eps_u: jnp.ndarray,
+                          choice_u: jnp.ndarray, eps, alpha, *,
+                          k_rings: int, n_rounds: int = 3, sizes=None):
     """Build K rings in each of E environments — ONE device call.
 
     ``w_batch``: (E, N, N) latency stack; ``starts``/``eps_u``/``choice_u``

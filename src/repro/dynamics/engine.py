@@ -42,6 +42,7 @@ import numpy as np
 
 from repro import overlay as overlay_api
 from repro.core import selection
+from repro.obs import REGISTRY
 from repro.core.construction import default_num_rings
 from repro.core.diameter import adjacency_from_edges, is_edge
 from repro.membership.elastic import HostState, detect_stragglers
@@ -64,6 +65,16 @@ __all__ = [
 ]
 
 Edge = Tuple[int, int]
+
+# one series per trace event kind, shared by every engine in the process —
+# scrapers diff before/after; children are pre-resolved so the per-event
+# cost is one dict lookup + one guarded increment
+_ENGINE_EVENTS = REGISTRY.counter(
+    "repro_engine_events_total", "churn events applied, by kind",
+    labels=("kind",))
+_EVENT_KIND = {k: _ENGINE_EVENTS.labels(kind=k)
+               for k in ("join", "leave", "fail", "latency_drift",
+                         "straggler")}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -536,6 +547,7 @@ class ChurnEngine:
             self._handle_straggler(e.node, e.factor)
         else:
             raise ValueError(f"unknown event kind {e.kind!r}")
+        _EVENT_KIND[e.kind].inc()
         self.clock = max(self.clock, t)
         self.events_processed += 1
 

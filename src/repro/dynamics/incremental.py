@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from repro.core import batcheval
 from repro.core.diameter import (INF, is_edge, largest_cc_diameter,
                                  relax_edge_update)
+from repro.obs import jit_span
 
 __all__ = [
     "relax_edge",
@@ -198,7 +199,8 @@ class IncrementalDistances:
         if self.mode == "full":
             self.rebuild()
             return
-        self._dist = relax_edge(self._dist, u, v, wuv)
+        with jit_span("incremental.relax", key=self.capacity):
+            self._dist = relax_edge(self._dist, u, v, wuv)
         self.stats["relaxations"] += 1
 
     def remove_edge(self, u: int, v: int) -> None:
@@ -227,7 +229,8 @@ class IncrementalDistances:
             return
         row = np.full(self.capacity, float(INF), np.float32)
         row[nbrs] = self.adj[u, nbrs]
-        self._dist = join_node(self._dist, jnp.asarray(row), u)
+        with jit_span("incremental.join", key=self.capacity):
+            self._dist = join_node(self._dist, jnp.asarray(row), u)
         self.stats["relaxations"] += 1
 
     def leave(self, u: int) -> None:
@@ -241,7 +244,8 @@ class IncrementalDistances:
         self.stats["events"] += 1
         self.stats["leaves"] += 1
         if self.mode != "full":        # full mode rebuilds anyway below
-            self._dist = tombstone(self._dist, u)
+            with jit_span("incremental.tombstone", key=self.capacity):
+                self._dist = tombstone(self._dist, u)
         self._note_deletion()
 
     def set_latency(self, u: int, v: int, ms: float) -> None:
@@ -261,7 +265,8 @@ class IncrementalDistances:
         if self.mode == "full":
             self.rebuild()
         elif ms < old_edge:
-            self._dist = relax_edge(self._dist, u, v, np.float32(ms))
+            with jit_span("incremental.relax", key=self.capacity):
+                self._dist = relax_edge(self._dist, u, v, np.float32(ms))
             self.stats["relaxations"] += 1
         elif ms > old_edge:
             self._note_deletion()
@@ -287,7 +292,8 @@ class IncrementalDistances:
     def rebuild(self) -> None:
         """Full from-scratch APSP over the live adjacency, one batched
         ``batcheval`` device call; resets the staleness counter."""
-        self._dist = batcheval.batched_apsp(jnp.asarray(self.adj[None]))[0]
+        with jit_span("incremental.rebuild", key=self.capacity):
+            self._dist = batcheval.batched_apsp(jnp.asarray(self.adj[None]))[0]
         self.pending_deletions = 0
         self.stats["rebuilds"] += 1
 

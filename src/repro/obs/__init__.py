@@ -1,0 +1,32 @@
+"""repro.obs — zero-dependency observability: metrics, tracing, logging.
+
+The measurement substrate for the whole stack (stdlib only):
+
+  metrics   — process-global thread-safe registry of counters / gauges /
+              fixed-bucket histograms (p50/p90/p99 from bucket counts,
+              label support, Prometheus text + serde-stamped JSON export)
+  tracing   — nestable ``span()`` wall-time timers, the JIT-aware
+              ``jit_span()`` (first-call compile vs steady-state execute),
+              and ``TimedRLock`` (lock-wait histograms)
+  logsetup  — structured one-line ``key=value`` stdlib logging,
+              ``REPRO_LOG_LEVEL``-controlled
+
+Consumers: ``repro.service`` (``GET /v1/metrics``, per-endpoint latency,
+staleness gauges), ``repro.dynamics`` (event counters, incremental-vs-
+rebuild maintenance timing), the jit'd core entry points
+(``batcheval.diameters``, ``rollout.rollout_episodes``), and
+``benchmarks/common.py`` (the same histogram implementation computes
+BENCH JSON percentiles).  ``benchmarks/fig18_obs.py`` gates the whole
+layer's overhead at <= 5% of the uninstrumented path.
+"""
+from .logsetup import configure, get_logger, kv  # noqa: F401
+from .metrics import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
+                      MetricsRegistry, parse_prometheus)
+from .tracing import (TimedRLock, current_span, jit_span,  # noqa: F401
+                      reset_jit_state, span)
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "parse_prometheus", "span", "current_span", "jit_span",
+    "reset_jit_state", "TimedRLock", "configure", "get_logger", "kv",
+]

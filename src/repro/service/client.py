@@ -77,6 +77,22 @@ class ServiceClient:
     def stats(self) -> Dict:
         return self._get("/v1/stats")
 
+    def metrics_text(self) -> str:
+        """Raw Prometheus text from ``GET /v1/metrics`` (not JSON — parse
+        with :func:`repro.obs.parse_prometheus`)."""
+        url = f"{self.base_url}/v1/metrics"
+        req = urllib.request.Request(url, method="GET")
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return resp.read().decode()
+        except urllib.error.HTTPError as e:
+            raise ServiceError(e.code, e.read().decode()[:200]) from None
+
+    def metrics(self) -> Dict:
+        """Parsed scrape: ``{series: {labels-tuple: value}}``."""
+        from repro.obs import parse_prometheus
+        return parse_prometheus(self.metrics_text())
+
     def diameter(self, exact: bool = False) -> Dict:
         return self._get("/v1/diameter", **({"exact": 1} if exact else {}))
 
@@ -113,10 +129,14 @@ class ServiceClient:
     # -- helpers ----------------------------------------------------------
 
     def wait_ready(self, timeout: float = 30.0, poll: float = 0.1) -> Dict:
-        """Poll /v1/health until the daemon answers (boot barrier)."""
-        deadline = time.time() + timeout
+        """Poll /v1/health until the daemon answers (boot barrier).
+
+        Deadlines run on the monotonic clock: a wall-clock step (NTP slew,
+        suspend/resume) can neither fire the timeout early nor stall it.
+        """
+        deadline = time.monotonic() + timeout
         last: Exception = RuntimeError("unreachable")
-        while time.time() < deadline:
+        while time.monotonic() < deadline:
             try:
                 return self.health()
             except (ServiceError, urllib.error.URLError, OSError) as e:
@@ -128,8 +148,8 @@ class ServiceClient:
     def wait_version(self, at_least: int, timeout: float = 60.0,
                      poll: float = 0.05) -> Dict:
         """Block until a re-optimization swap lands (version >= at_least)."""
-        deadline = time.time() + timeout
-        while time.time() < deadline:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
             st = self.stats()
             if st["version"] >= at_least:
                 return st

@@ -30,12 +30,21 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import selection
+from repro.obs import REGISTRY, get_logger, kv, span
 
 from .state import ServiceState
 
 __all__ = ["Reoptimizer"]
 
 _CRASH_ENV = "REPRO_SERVICE_CRASH_AFTER_SWAP"
+
+_log = get_logger(__name__)
+
+# cycle outcomes: swapped (new overlay landed), kept (adapt said keep),
+# skipped (fleet too small), error (cycle raised; daemon survives)
+_CYCLES = REGISTRY.counter(
+    "repro_reopt_cycles_total", "re-optimization cycles, by outcome",
+    labels=("outcome",))
 
 
 class Reoptimizer:
@@ -113,6 +122,8 @@ class Reoptimizer:
                     self.state.write_snapshot(reason="cadence")
             except Exception:  # noqa: BLE001 - a failed cycle must not kill the daemon
                 self.last_error = traceback.format_exc()
+                _CYCLES.labels(outcome="error").inc()
+                _log.exception(kv("reopt.cycle_failed", method=self.method))
 
     # -- one cycle --------------------------------------------------------
 
@@ -125,18 +136,30 @@ class Reoptimizer:
         """
         self.in_flight = True
         try:
-            job = self.state.capture()
+            with span("reopt.capture"):
+                job = self.state.capture()
             if len(job.live) < 4:
+                _CYCLES.labels(outcome="skipped").inc()
                 return None
             seed = int(self._rng.integers(2**31))
-            new_ov = self._optimize(job, seed)
+            with span("reopt.optimize"):
+                new_ov = self._optimize(job, seed)
             if new_ov is None:
                 with self.state.lock:
                     self.state.reopts_kept += 1
                     self.state.events_since_reopt = 0
+                _CYCLES.labels(outcome="kept").inc()
+                _log.info(kv("reopt.cycle", outcome="kept",
+                             method=self.method, n_live=len(job.live)))
                 return None
-            res = self.state.commit_reopt(job, new_ov)
+            with span("reopt.commit"):
+                res = self.state.commit_reopt(job, new_ov)
             self.cycles += 1
+            _CYCLES.labels(outcome="swapped").inc()
+            _log.info(kv("reopt.cycle", outcome="swapped",
+                         method=self.method, n_live=len(job.live),
+                         version=res["version"],
+                         edges_added=res["edges_added"]))
             self._maybe_crash()          # the torn-state window under test
             self.state.write_snapshot(reason="reopt")
             return res

@@ -5,6 +5,9 @@ Endpoints (all JSON, all ``repro.serde`` schema-stamped):
 =========================  ==================================================
 ``GET  /v1/health``        liveness + schema/version handshake
 ``GET  /v1/stats``         counters, staleness state, maintenance stats
+``GET  /v1/metrics``       Prometheus text exposition (``?format=json`` for
+                           the serde-stamped JSON export) — NOT wrapped in
+                           the JSON envelope
 ``GET  /v1/diameter``      largest-CC diameter (``?exact=1`` forces refresh)
 ``GET  /v1/route``         ``?src=&dst=``: distance bound + greedy path
 ``GET  /v1/adjacency``     live nodes + weighted edge list
@@ -14,6 +17,12 @@ Endpoints (all JSON, all ``repro.serde`` schema-stamped):
 ``POST /v1/snapshot``      force an atomic-commit snapshot
 ``POST /v1/shutdown``      graceful stop (final snapshot, then exit)
 =========================  ==================================================
+
+Every request lands in the ``repro_http_requests_total{method,endpoint,
+status}`` counter and the ``repro_http_request_seconds{endpoint}``
+histogram, and is logged (DEBUG) through the structured ``repro.obs``
+logger — ``BaseHTTPRequestHandler``'s raw-stderr ``log_message`` is routed
+there too, so ``REPRO_LOG_LEVEL`` controls all of it.
 
 Any other ``/vN/`` prefix answers 404 with the supported versions — clients
 from the future fail loudly at the handshake, mirroring what
@@ -34,12 +43,15 @@ from __future__ import annotations
 import argparse
 import json
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional
 from urllib.parse import parse_qs, urlparse
 
 from repro import serde
 from repro.dynamics.scenarios import Event, Trace
+from repro.obs import REGISTRY, configure as configure_logging, get_logger, kv
+from repro.obs.metrics import LATENCY_BUCKETS_S
 
 from .reoptimizer import Reoptimizer
 from .state import ServiceState
@@ -47,6 +59,23 @@ from .state import ServiceState
 __all__ = ["ServiceServer", "main"]
 
 API_VERSIONS = ("v1",)
+
+_log = get_logger(__name__)
+
+# endpoint label values are drawn from this closed set (unknown paths fold
+# into "_unknown") so a scanner can't blow up the metric cardinality
+_ENDPOINTS = frozenset({
+    "health", "stats", "metrics", "diameter", "route", "adjacency",
+    "overlay", "events", "reoptimize", "snapshot", "shutdown"})
+
+_HTTP_REQS = REGISTRY.counter(
+    "repro_http_requests_total",
+    "HTTP requests served, by method / endpoint / status code",
+    labels=("method", "endpoint", "status"))
+_HTTP_LAT = REGISTRY.histogram(
+    "repro_http_request_seconds",
+    "request handling wall time, by endpoint",
+    labels=("endpoint",), buckets=LATENCY_BUCKETS_S)
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -60,15 +89,36 @@ class _Handler(BaseHTTPRequestHandler):
     reopt: Optional[Reoptimizer]
     shutdown_event: threading.Event
 
-    def log_message(self, fmt, *args):  # quiet by default; stats count queries
-        pass
+    # per-request instrumentation scratch
+    _status: int = 0
+    _endpoint: str = "_unknown"
+
+    def log_message(self, fmt, *args):
+        """http.server's raw-stderr path, routed into the structured
+        logger (DEBUG — per-request records; errors go via log_error)."""
+        _log.debug(kv("http.server", client=self.address_string(),
+                      msg=fmt % args))
+
+    def log_error(self, fmt, *args):
+        _log.warning(kv("http.server_error", client=self.address_string(),
+                        msg=fmt % args))
 
     # -- plumbing ---------------------------------------------------------
 
     def _reply(self, code: int, payload: Dict) -> None:
-        body = serde.dumps(payload).encode()
+        self._reply_bytes(code, serde.dumps(payload).encode(),
+                          "application/json")
+
+    def _reply_text(self, code: int, text: str,
+                    content_type: str = "text/plain; version=0.0.4; "
+                                        "charset=utf-8") -> None:
+        self._reply_bytes(code, text.encode(), content_type)
+
+    def _reply_bytes(self, code: int, body: bytes,
+                     content_type: str) -> None:
+        self._status = code
         self.send_response(code)
-        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
@@ -80,6 +130,8 @@ class _Handler(BaseHTTPRequestHandler):
         """Returns the path below /v1, or None after answering an error."""
         path = urlparse(self.path).path.rstrip("/")
         parts = [p for p in path.split("/") if p]
+        if len(parts) > 1 and parts[1] in _ENDPOINTS:
+            self._endpoint = parts[1]
         if not parts or not parts[0].startswith("v"):
             self._error(404, f"endpoints live under /{API_VERSIONS[0]}/")
             return None
@@ -98,9 +150,32 @@ class _Handler(BaseHTTPRequestHandler):
             self._error(400, f"bad request body: {e}")
             return None
 
+    # -- instrumentation wrapper ------------------------------------------
+
+    def _instrumented(self, method: str, handler) -> None:
+        """Per-endpoint latency histogram + status-code counter around the
+        actual dispatch; the endpoint label is resolved by _route_version
+        and unknown paths fold into ``_unknown``."""
+        self._status = 0
+        self._endpoint = "_unknown"
+        t0 = time.perf_counter()
+        try:
+            handler()
+        finally:
+            dt = time.perf_counter() - t0
+            status = str(self._status or 500)
+            _HTTP_LAT.labels(endpoint=self._endpoint).observe(dt)
+            _HTTP_REQS.labels(method=method, endpoint=self._endpoint,
+                              status=status).inc()
+            _log.debug(kv("http.request", method=method, path=self.path,
+                          status=status, ms=dt * 1e3))
+
     # -- GET --------------------------------------------------------------
 
     def do_GET(self) -> None:  # noqa: N802 - BaseHTTPRequestHandler API
+        self._instrumented("GET", self._do_get)
+
+    def _do_get(self) -> None:
         sub = self._route_version()
         if sub is None:
             return
@@ -112,6 +187,13 @@ class _Handler(BaseHTTPRequestHandler):
                                   "version": self.state.version})
             elif sub == "stats":
                 self._reply(200, self.state.stats())
+            elif sub == "metrics":
+                if q.get("format", [""])[0] == "json":
+                    # render_json is already serde-stamped — send verbatim
+                    self._reply_text(200, REGISTRY.render_json(),
+                                     content_type="application/json")
+                else:
+                    self._reply_text(200, REGISTRY.render_prometheus())
             elif sub == "diameter":
                 exact = q.get("exact", ["0"])[0] in ("1", "true")
                 self._reply(200, self.state.diameter(exact=exact))
@@ -137,6 +219,9 @@ class _Handler(BaseHTTPRequestHandler):
     # -- POST -------------------------------------------------------------
 
     def do_POST(self) -> None:  # noqa: N802
+        self._instrumented("POST", self._do_post)
+
+    def _do_post(self) -> None:
         sub = self._route_version()
         if sub is None:
             return
@@ -226,6 +311,8 @@ class ServiceServer:
         self._thread = threading.Thread(target=self.httpd.serve_forever,
                                         daemon=True, name="repro-service-http")
         self._thread.start()
+        _log.info(kv("server.start", host=self.host, port=self.port,
+                     reopt=self.reopt is not None))
         return self
 
     def stop(self, final_snapshot: bool = True) -> None:
@@ -237,6 +324,7 @@ class ServiceServer:
         self.httpd.server_close()
         if self._thread is not None:
             self._thread.join(10)
+        _log.info(kv("server.stop", final_snapshot=final_snapshot))
 
     def serve_until_shutdown(self) -> None:
         """Block until POST /v1/shutdown (the __main__ daemon loop)."""
@@ -251,6 +339,10 @@ class ServiceServer:
 
 
 def main(argv=None) -> None:
+    # the daemon defaults to info-level structured logs on stderr; the
+    # SERVING/STOPPED stdout lines below stay — they are the boot protocol
+    # the smoke tools parse
+    configure_logging(default="info")
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=0,

@@ -27,8 +27,8 @@ which runs outside the lock by design.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time as _time
+import weakref
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -36,11 +36,72 @@ import numpy as np
 from repro.core.diameter import INF, is_edge
 from repro.dynamics.engine import POLICIES, ChurnEngine
 from repro.dynamics.scenarios import Event, Trace
+from repro.obs import REGISTRY, TimedRLock, get_logger, kv, span
 from repro.overlay import Overlay
 
 from . import snapshots as snaps
 
 __all__ = ["ServiceState", "ReoptJob"]
+
+_log = get_logger(__name__)
+
+# -- instruments (process-global; registration is idempotent) ---------------
+_EVENTS = REGISTRY.counter(
+    "repro_service_events_ingested_total",
+    "events accepted through ServiceState.ingest (POST /v1/events)")
+_INGEST_BATCHES = REGISTRY.counter(
+    "repro_service_ingest_batches_total", "ingest calls (event batches)")
+_QUERIES = REGISTRY.counter(
+    "repro_service_queries_total",
+    "state queries served, by endpoint kind and staleness bound",
+    labels=("kind", "bound"))
+_SNAPSHOTS = REGISTRY.counter(
+    "repro_service_snapshots_total", "committed snapshots, by reason",
+    labels=("reason",))
+_REOPT_EDGES = REGISTRY.counter(
+    "repro_service_reopt_edges_applied_total",
+    "re-optimization edges landed as incremental relaxations")
+
+_STALE_GAUGE = REGISTRY.gauge(
+    "repro_service_stale_entries",
+    "pending tombstoned deletions (distance matrix is a lower bound when > 0)")
+_VERSION_GAUGE = REGISTRY.gauge(
+    "repro_service_overlay_version", "served overlay swap generation")
+_NLIVE_GAUGE = REGISTRY.gauge(
+    "repro_service_n_live", "live nodes in the served fleet")
+_PENDING_CONF_GAUGE = REGISTRY.gauge(
+    "repro_service_pending_confirmations",
+    "failures detected but not yet SWIM-confirmed")
+_SNAP_AGE_GAUGE = REGISTRY.gauge(
+    "repro_service_snapshot_age_seconds",
+    "monotonic seconds since the last committed snapshot (-1 before any)")
+_UPTIME_GAUGE = REGISTRY.gauge(
+    "repro_service_uptime_seconds", "monotonic seconds since state boot")
+
+
+def _bind_state_gauges(state: "ServiceState") -> None:
+    """Point the scrape-time gauges at ``state`` (the newest instance wins —
+    one daemon per process in production).  Callbacks hold only a weakref
+    and read plain ints/floats WITHOUT the state lock: a scrape never
+    blocks on (or deadlocks with) an in-flight ingest."""
+    ref = weakref.ref(state)
+
+    def fld(fn, default=0.0):
+        def read():
+            s = ref()
+            return float(fn(s)) if s is not None else default
+        return read
+
+    _STALE_GAUGE.set_function(fld(lambda s: s.engine.inc.pending_deletions))
+    _VERSION_GAUGE.set_function(fld(lambda s: s.version))
+    _NLIVE_GAUGE.set_function(fld(lambda s: s.engine.inc.n_live))
+    _PENDING_CONF_GAUGE.set_function(
+        fld(lambda s: s.engine.pending_confirmations))
+    _SNAP_AGE_GAUGE.set_function(fld(
+        lambda s: (_time.monotonic() - s.last_snapshot_monotonic
+                   if s.last_snapshot_monotonic is not None else -1.0),
+        default=-1.0))
+    _UPTIME_GAUGE.set_function(fld(lambda s: s.uptime_s))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +122,10 @@ class ServiceState:
                  snapshot_dir: Optional[str] = None, keep_snapshots: int = 3,
                  version: int = 0, events_ingested: int = 0,
                  snapshot_seq: int = 0):
-        self.lock = threading.RLock()
+        self.lock = TimedRLock(
+            registry=REGISTRY, name="repro_service_lock_wait_seconds",
+            help="wait to acquire the ServiceState lock (handler threads "
+                 "vs re-optimizer contention)")
         self.engine = engine
         self.policy_name = policy_name
         self.snapshot_dir = snapshot_dir
@@ -74,9 +138,21 @@ class ServiceState:
         self.snapshot_seq = snapshot_seq
         self.events_since_snapshot = 0
         self.events_since_reopt = 0
+        # wall clock is metadata only (snapshots, logs); every duration —
+        # uptime, snapshot age — comes from the monotonic clock, so a step
+        # of the system clock never corrupts them
         self.started_at = _time.time()
+        self._started_monotonic = _time.monotonic()
+        self.last_snapshot_monotonic: Optional[float] = None
         self._overlay: Optional[Overlay] = None
         self._overlay_live: Optional[np.ndarray] = None
+        _bind_state_gauges(self)
+        _log.info(kv("state.boot", policy=policy_name, version=version,
+                     n_live=engine.inc.n_live, capacity=engine.inc.capacity))
+
+    @property
+    def uptime_s(self) -> float:
+        return _time.monotonic() - self._started_monotonic
 
     # -- constructors -----------------------------------------------------
 
@@ -179,6 +255,8 @@ class ServiceState:
             self.events_since_snapshot += len(events)
             self.events_since_reopt += len(events)
             self._overlay = None
+            _EVENTS.inc(len(events))
+            _INGEST_BATCHES.inc()
             return {"accepted": len(events), "applied": applied,
                     "clock": self.engine.clock, "n_live": self.engine.inc.n_live,
                     "pending_confirmations": self.engine.pending_confirmations,
@@ -186,12 +264,18 @@ class ServiceState:
 
     # -- queries ----------------------------------------------------------
 
-    def _count_query(self) -> None:
+    def _count_query(self, kind: str = "stats") -> None:
+        """Count one served query, labelled by endpoint kind and by whether
+        the answer came from an exact matrix or a staleness lower bound —
+        the scraped exact-vs-lower ratio is the staleness health signal."""
         self.queries_served += 1
+        bound = ("exact" if self.engine.inc.pending_deletions == 0
+                 else "lower")
+        _QUERIES.labels(kind=kind, bound=bound).inc()
 
     def stats(self) -> Dict:
         with self.lock:
-            self._count_query()
+            self._count_query("stats")
             inc = self.engine.inc
             return {
                 "policy": self.policy_name,
@@ -210,12 +294,13 @@ class ServiceState:
                 "reopts_kept": self.reopts_kept,
                 "queries_served": self.queries_served,
                 "snapshot_seq": self.snapshot_seq,
-                "uptime_s": _time.time() - self.started_at,
+                "started_at_unixtime": self.started_at,
+                "uptime_s": self.uptime_s,
             }
 
     def diameter(self, exact: bool = False) -> Dict:
         with self.lock:
-            self._count_query()
+            self._count_query("diameter")
             inc = self.engine.inc
             d = inc.diameter(exact=exact)
             return {"diameter": d,
@@ -233,7 +318,7 @@ class ServiceState:
         the distance bound is served.
         """
         with self.lock:
-            self._count_query()
+            self._count_query("route")
             inc = self.engine.inc
             for name, u in (("src", src), ("dst", dst)):
                 if not 0 <= u < inc.capacity:
@@ -271,7 +356,7 @@ class ServiceState:
 
     def adjacency(self) -> Dict:
         with self.lock:
-            self._count_query()
+            self._count_query("adjacency")
             inc = self.engine.inc
             live = inc.live_ids()
             sub = inc.adj[np.ix_(live, live)]
@@ -340,6 +425,10 @@ class ServiceState:
             self.reopts_completed += 1
             self.events_since_reopt = 0
             self._overlay = None             # next overlay() serves buffer B
+            _REOPT_EDGES.inc(applied)
+            _log.info(kv("reopt.commit", version=self.version,
+                         edges_added=applied,
+                         edges_proposed=int(len(new_edges))))
             return {"version": self.version, "edges_added": applied,
                     "edges_proposed": int(len(new_edges))}
 
@@ -378,17 +467,26 @@ class ServiceState:
                 "detect_failures": eng.detect_failures,
                 "rebuild_threshold": inc.rebuild_threshold,
                 "seed": 0,
+                # wall clock is snapshot METADATA only — restore logic and
+                # all durations use event clocks / the monotonic clock
+                "wall_time": _time.time(),
             }
 
     def write_snapshot(self, reason: str = "periodic") -> Optional[str]:
         """Atomic-commit a snapshot (no-op without a snapshot dir)."""
         if not self.snapshot_dir:
             return None
-        payload = self.snapshot_payload()
-        payload["reason"] = reason
-        with self.lock:
-            self.snapshot_seq += 1
-            seq = self.snapshot_seq
-            self.events_since_snapshot = 0
-        return snaps.write_snapshot(self.snapshot_dir, seq, payload,
-                                    keep=self.keep_snapshots)
+        with span("snapshot.write"):
+            payload = self.snapshot_payload()
+            payload["reason"] = reason
+            with self.lock:
+                self.snapshot_seq += 1
+                seq = self.snapshot_seq
+                self.events_since_snapshot = 0
+            path = snaps.write_snapshot(self.snapshot_dir, seq, payload,
+                                        keep=self.keep_snapshots)
+        self.last_snapshot_monotonic = _time.monotonic()
+        _SNAPSHOTS.labels(reason=reason).inc()
+        _log.info(kv("snapshot.committed", seq=seq, reason=reason,
+                     path=path))
+        return path

@@ -3,7 +3,9 @@
 Starts ``python -m repro.service.server`` as a real subprocess, streams a
 50-event poisson-churn trace through :class:`repro.service.ServiceClient`,
 asserts every query endpoint answers sensibly, forces a re-optimization and
-a snapshot, and checks the daemon exits cleanly on ``POST /v1/shutdown``.
+a snapshot, scrapes ``GET /v1/metrics`` and checks the counters match what
+was streamed (a fresh process, so absolute values are exact), and checks
+the daemon exits cleanly on ``POST /v1/shutdown``.
 
     PYTHONPATH=src python tools/service_smoke.py [--events 50] [--n0 32]
 
@@ -82,6 +84,18 @@ def main() -> None:
         assert snap["seq"] >= 1, snap
         d1 = c.diameter(exact=True)
         assert d1["exact"] and d1["diameter"] > 0
+
+        # the observability scrape: a fresh daemon process, so counters are
+        # absolute — ingested events must match what this script streamed
+        scraped = c.metrics()
+        assert (scraped["repro_service_events_ingested_total"][()]
+                == len(events)), scraped["repro_service_events_ingested_total"]
+        reqs = scraped.get("repro_http_requests_total", {})
+        assert sum(reqs.values()) > 0, "no HTTP requests counted"
+        post_key = (("endpoint", "events"), ("method", "POST"),
+                    ("status", "200"))
+        assert reqs[post_key] == (len(events) + 9) // 10, reqs
+        assert scraped["repro_service_n_live"][()] == st["n_live"]
 
         c.shutdown()
         rc = proc.wait(timeout=30)
