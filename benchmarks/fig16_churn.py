@@ -148,13 +148,13 @@ def run(n_gate: int = 128, gate_ops: int = 80, gate_threshold: int = 16,
 
     # ---- part B: scenario x policy diameter trajectories -----------------
     print("scenario,policy,events,n_live_end,mean_diam,peak_diam,final_diam,"
-          "rebuilds")
+          "mean_stretch,rebuilds")
     results["initial_overlays"] = {}
     for sname, make in SCENARIOS.items():
         trace = make(n0=traj_n0, seed=seed + 3)
         for pname, P in POLICIES.items():
             eng = ChurnEngine(trace, P(), seed=seed + 4,
-                              detect_failures=True)
+                              detect_failures=True, route_probe=4)
             if pname == "dgro":
                 # snapshot what the DGRO replay started from (replayable
                 # next to the trace JSON via Overlay.from_json)
@@ -170,12 +170,14 @@ def run(n_gate: int = 128, gate_ops: int = 80, gate_threshold: int = 16,
                 "mean_diameter": res.mean_diameter,
                 "peak_diameter": res.peak_diameter,
                 "final_diameter": res.final_diameter,
+                "mean_stretch": res.mean_stretch,
                 "rebuilds": res.stats["rebuilds"],
             }
             results["trajectories"].append(row)
             print(f"{sname},{pname},{row['events']},{row['n_live_end']},"
                   f"{row['mean_diameter']:.1f},{row['peak_diameter']:.1f},"
-                  f"{row['final_diameter']:.1f},{row['rebuilds']}")
+                  f"{row['final_diameter']:.1f},{row['mean_stretch']:.2f},"
+                  f"{row['rebuilds']}")
 
     wall = time.time() - t0
     with open(out_json, "w") as f:

@@ -1,0 +1,195 @@
+"""Greedy routing workloads over every overlay family (fig. 19).
+
+Part A — the gate.  A (P, 2) batch of uniform pairs is greedy-routed over
+a Chord overlay two ways:
+
+  * ``device`` — ``routing.route_pairs``: the whole batch in ONE jit'd
+    fixed-length ``lax.scan`` with masked termination;
+  * ``host``   — ``routing.route_pairs_host``: the per-pair numpy loop
+    (the same float32 next-hop rule, and the serving path behind the
+    control plane's ``/v1/route``).
+
+Three hard conditions (enforced by ``benchmarks.run`` via ``passes_gate``):
+the device router is >= 5x the host loop at N=256, P=1024; hop / latency /
+success parity with the host reference is exact at a fixed seed (both
+next-hop policies); and greedy success is 1.0 on the connected overlay.
+A fourth rides along from ``core.rollout``: ``stretch_weight=0.0`` is
+bit-identical to the unshaped episode engine (and 0.5 is not).
+
+Part B — the stretch matrix.  Every builder in {dgro, dgro-dqn, chord,
+perigee, kleinberg, papillon} x every workload mix (uniform / hotspot /
+regional) x both policies is routed and summarized
+(``routing.summarize``); rows land in ``BENCH_fig19_routing.json`` and
+every batch is recorded into the shared ``repro_route_*`` instruments.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+
+from repro import overlay, routing
+from repro.core.topology import make_latency
+
+BUILDERS = ("dgro", "dgro-dqn", "chord", "perigee", "kleinberg", "papillon")
+
+# the matrix measures routing quality, not construction quality: dgro-dqn
+# skips training (epochs=0 keeps the Q net at init) because compiling the
+# fused train_epoch scan at N=256 takes minutes on CPU, while the
+# construction-only vmapped rollout it still exercises compiles in seconds
+_BUILD_OVERRIDES = {"dgro-dqn": dict(k=2, epochs=0, n_starts=2)}
+
+
+def _build(name: str, w: np.ndarray, seed: int) -> overlay.Overlay:
+    return overlay.build(name, w, seed=seed, **_BUILD_OVERRIDES.get(name, {}))
+
+
+def _time_device(adj, dist, pairs, ring, policy: str, budget: int,
+                 repeats: int = 3) -> float:
+    routing.route_pairs(adj, dist, pairs, policy=policy, ring=ring,
+                        hop_budget=budget)            # warm the jit cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        routing.route_pairs(adj, dist, pairs, policy=policy, ring=ring,
+                            hop_budget=budget)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _gate(n: int, n_pairs: int, seed: int) -> dict:
+    w = make_latency("bitnode", n, seed=seed)
+    ov = _build("chord", w, seed)
+    adj = np.asarray(ov.adjacency, np.float32)
+    dist = np.asarray(ov.distances(), np.float32)
+    ring = np.asarray(ov.rings[0])
+    pairs = routing.sample_pairs(n, n_pairs, "uniform", seed=seed + 1)
+    # ~8x the deepest walk either policy takes on a Chord overlay (O(log N)
+    # hops): the masked scan's fixed length prices the device path, and the
+    # host loop early-exits regardless, so the comparison stays apples-to-
+    # apples while success must still hit 1.0 within the budget
+    budget = min(64, n)
+
+    parity = True
+    success = {}
+    t_host = float("inf")
+    for policy in routing.POLICIES:
+        dev = routing.route_pairs(adj, dist, pairs, policy=policy,
+                                  ring=ring, hop_budget=budget)
+        t0 = time.perf_counter()
+        host = routing.route_pairs_host(adj, dist, pairs, policy=policy,
+                                        ring=ring, hop_budget=budget)
+        if policy == "latency":
+            t_host = time.perf_counter() - t0
+        parity &= (np.array_equal(dev.hops, host.hops)
+                   and np.array_equal(dev.latency, host.latency)
+                   and np.array_equal(dev.success, host.success))
+        success[policy] = float(dev.success.mean())
+        routing.record_route_batch(policy, dev)
+    t_dev = _time_device(adj, dist, pairs, ring, "latency", budget)
+    speedup = t_host / t_dev
+    return {
+        "n": n, "pairs": n_pairs, "hop_budget": budget,
+        "t_device_s": t_dev, "t_host_s": t_host, "speedup": speedup,
+        "parity": bool(parity),
+        "success_rate_latency": success["latency"],
+        "success_rate_ring": success["ring"],
+    }
+
+
+def _rollout_parity(seed: int) -> bool:
+    """stretch_weight=0.0 must be bit-identical to the unshaped engine."""
+    import jax.numpy as jnp
+
+    from repro.core import rollout
+    from repro.core.embedding import init_qparams
+
+    n, k, n_envs = 8, 2, 2
+    params = init_qparams(jax.random.PRNGKey(seed), 8, 16)
+    ws = jnp.asarray(np.stack([make_latency("uniform", n, seed=seed + i)
+                               for i in range(n_envs)]), jnp.float32)
+    plan = rollout.make_plan(np.random.default_rng(seed), n_envs, k, n)
+    args = (params, ws, jnp.asarray(plan.starts), jnp.asarray(plan.eps_u),
+            jnp.asarray(plan.choice_u), 0.3, 0.1)
+    base = rollout.rollout_episodes(*args, k_rings=k, n_rounds=2)
+    zero = rollout.rollout_episodes(*args, k_rings=k, n_rounds=2,
+                                    stretch_weight=0.0)
+    shaped = rollout.rollout_episodes(*args, k_rings=k, n_rounds=2,
+                                      stretch_weight=0.5)
+    identical = all(np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(base, zero))
+    differs = not np.array_equal(np.asarray(base[1]), np.asarray(shaped[1]))
+    return identical and differs
+
+
+def run(n_gate: int = 256, gate_pairs: int = 1024, matrix_n: int = 256,
+        matrix_pairs: int = 256, seed: int = 0,
+        out_json: str = "BENCH_fig19_routing.json"):
+    t0 = time.time()
+    results = {"gate": {}, "matrix": []}
+
+    # ---- part A: device-vs-host gate at N=n_gate, P=gate_pairs -----------
+    results["gate"] = _gate(n_gate, gate_pairs, seed)
+    results["gate"]["rollout_parity"] = _rollout_parity(seed)
+    g = results["gate"]
+    print(f"# router device {g['t_device_s'] * 1e3:.1f}ms vs host "
+          f"{g['t_host_s'] * 1e3:.1f}ms at N={n_gate}, P={gate_pairs} "
+          f"-> {g['speedup']:.1f}x (gate >= 5x); parity={g['parity']}; "
+          f"success latency={g['success_rate_latency']:.3f} "
+          f"ring={g['success_rate_ring']:.3f}; "
+          f"rollout stretch_weight parity={g['rollout_parity']}")
+
+    # ---- part B: builder x workload x policy stretch matrix --------------
+    w = make_latency("bitnode", matrix_n, seed=seed + 2)
+    print("builder,workload,policy,success,hops_mean,stretch_mean,"
+          "stretch_p99")
+    for builder in BUILDERS:
+        ov = _build(builder, w, seed)
+        adj = np.asarray(ov.adjacency, np.float32)
+        dist = np.asarray(ov.distances(), np.float32)
+        ring = np.asarray(ov.rings[0])
+        for workload in routing.WORKLOADS:
+            pairs = routing.sample_pairs(matrix_n, matrix_pairs, workload,
+                                         seed=seed + 3)
+            for policy in routing.POLICIES:
+                res = routing.route_pairs(adj, dist, pairs, policy=policy,
+                                          ring=ring, hop_budget=matrix_n)
+                routing.record_route_batch(policy, res)
+                s = routing.summarize(res, builder=builder,
+                                      workload=workload, policy=policy,
+                                      n=matrix_n, hop_budget=matrix_n)
+                results["matrix"].append(s.to_dict())
+                print(f"{builder},{workload},{policy},"
+                      f"{s.success_rate:.3f},{s.hops_mean:.2f},"
+                      f"{s.stretch_mean:.3f},{s.stretch_p99:.3f}")
+
+    wall = time.time() - t0
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    passes = (g["speedup"] >= 5.0 and g["parity"]
+              and g["success_rate_latency"] == 1.0
+              and g["success_rate_ring"] == 1.0 and g["rollout_parity"])
+    n_rows = 1 + len(results["matrix"])
+    return {"name": "fig19-routing",
+            "us_per_call": wall * 1e6 / n_rows,
+            "derived": f"device router {g['speedup']:.1f}x vs host at "
+                       f"N={n_gate}, P={gate_pairs}; "
+                       f"{len(results['matrix'])} matrix cells",
+            "passes_gate": passes}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-gate", type=int, default=256)
+    ap.add_argument("--gate-pairs", type=int, default=1024)
+    ap.add_argument("--matrix-n", type=int, default=256)
+    ap.add_argument("--matrix-pairs", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(run(n_gate=args.n_gate, gate_pairs=args.gate_pairs,
+              matrix_n=args.matrix_n, matrix_pairs=args.matrix_pairs,
+              seed=args.seed))

@@ -85,6 +85,12 @@ GATES = {
                       "scraped counters exact, histogram p99 within bucket",
                       key="passes_gate", bench_file="BENCH_fig18_obs.json",
                       bench_metric="gate.overhead_pct"),
+    "fig19-routing": Gate("vmapped router >= 5x host per-pair loop at "
+                          "P=1024, host parity at fixed seed, greedy "
+                          "success 1.0",
+                          key="passes_gate",
+                          bench_file="BENCH_fig19_routing.json",
+                          bench_metric="gate.speedup"),
     "roofline": Gate("informational: kernel roofline table renders"),
 }
 
@@ -132,7 +138,7 @@ def main() -> None:
                             fig11_ring_selection, fig12_ring_ablation,
                             fig13_kring_compare, fig14_parallel,
                             fig15_batcheval, fig16_churn, fig17_service,
-                            fig18_obs, roofline_table)
+                            fig18_obs, fig19_routing, roofline_table)
 
     fast = args.fast
     jobs = [
@@ -186,6 +192,11 @@ def main() -> None:
         # A/B order alternation balances run positions)
         ("fig18-obs", lambda: fig18_obs.run(
             repeats=2 if fast else 4)),
+        # the >=5x router gate + host parity + success 1.0 always run at
+        # N=256, P=1024; --fast only shrinks the stretch matrix
+        ("fig19-routing", lambda: fig19_routing.run(
+            matrix_n=64 if fast else 256,
+            matrix_pairs=128 if fast else 256)),
         ("roofline", roofline_table.run),
     ]
 

@@ -225,6 +225,24 @@ def _apply_edge(w_batch, dist, adj, v, a, prev_d, alpha):
     return dist, adj, new_d, reward, w_edge
 
 
+def _stretch_potential(dist, opt):
+    """Mean routing stretch of the partial solution, per env.
+
+    ``dist``: (E, N, N) partial-overlay APSP (INF where unreached);
+    ``opt``: (E, N, N) full-graph APSP.  Averages ``dist/opt`` over
+    finite off-diagonal pairs — the potential whose per-step decrease the
+    optional ``stretch_weight`` reward term pays out (pairs the overlay
+    has not yet connected contribute nothing, so the term only rewards
+    tightening paths that exist, never merely connecting new ones — the
+    base diameter reward already owns connectivity)."""
+    n = dist.shape[-1]
+    offdiag = ~jnp.eye(n, dtype=bool)
+    finite = (dist < INF / 2) & offdiag
+    ratio = jnp.where(finite, dist / jnp.maximum(opt, jnp.float32(1e-6)), 0.0)
+    cnt = jnp.sum(finite, axis=(1, 2)).astype(jnp.float32)
+    return jnp.sum(ratio, axis=(1, 2)) / jnp.maximum(cnt, 1.0)
+
+
 def _episode_init(n_envs: int, n: int):
     dist0 = jnp.full((n_envs, n, n), INF, jnp.float32)
     ar = jnp.arange(n)
@@ -263,7 +281,8 @@ def _reset_ring(ring_start, start_t, visited, v, cur_start, pad_mask=None):
 def rollout_episodes(params: QParams, w_batch: jnp.ndarray,
                      starts: jnp.ndarray, eps_u: jnp.ndarray,
                      choice_u: jnp.ndarray, eps, alpha, *,
-                     k_rings: int, n_rounds: int = 3, sizes=None):
+                     k_rings: int, n_rounds: int = 3, sizes=None,
+                     stretch_weight: float = 0.0):
     """Build K rings in each of E environments — ONE device call.
 
     (Host wrapper: the jit'd engine is ``_rollout_episodes_jit``; this
@@ -272,18 +291,22 @@ def rollout_episodes(params: QParams, w_batch: jnp.ndarray,
     and the steady-state execute land in separate histograms.)
     """
     from repro.obs import jit_span
-    key = (tuple(w_batch.shape), k_rings, n_rounds, sizes is None)
+    key = (tuple(w_batch.shape), k_rings, n_rounds, sizes is None,
+           float(stretch_weight))
     with jit_span("rollout.rollout_episodes", key=key):
         return _rollout_episodes_jit(
             params, w_batch, starts, eps_u, choice_u, eps, alpha,
-            k_rings=k_rings, n_rounds=n_rounds, sizes=sizes)
+            k_rings=k_rings, n_rounds=n_rounds, sizes=sizes,
+            stretch_weight=float(stretch_weight))
 
 
-@functools.partial(jax.jit, static_argnames=("k_rings", "n_rounds"))
+@functools.partial(jax.jit,
+                   static_argnames=("k_rings", "n_rounds", "stretch_weight"))
 def _rollout_episodes_jit(params: QParams, w_batch: jnp.ndarray,
                           starts: jnp.ndarray, eps_u: jnp.ndarray,
                           choice_u: jnp.ndarray, eps, alpha, *,
-                          k_rings: int, n_rounds: int = 3, sizes=None):
+                          k_rings: int, n_rounds: int = 3, sizes=None,
+                          stretch_weight: float = 0.0):
     """Build K rings in each of E environments — ONE device call.
 
     ``w_batch``: (E, N, N) latency stack; ``starts``/``eps_u``/``choice_u``
@@ -297,8 +320,21 @@ def _rollout_episodes_jit(params: QParams, w_batch: jnp.ndarray,
     step ``sizes[e] - 1``, and later steps of that ring are no-ops (state
     frozen, reward 0).  ``sizes=None`` (the default) is exactly the
     full-size behavior; env starts must satisfy ``starts[e] < sizes[e]``.
+
+    ``stretch_weight`` (static, default 0.0) adds a routing-stretch
+    shaping term: each step additionally pays
+    ``stretch_weight * (potential(dist) - potential(dist'))`` where the
+    potential is :func:`_stretch_potential` against the full-graph APSP
+    of ``w_batch``.  The falsy default skips the branch at TRACE time, so
+    ``stretch_weight=0.0`` is bit-identical to the unshaped engine (same
+    compiled program — the parity gate in ``benchmarks/fig19_routing.py``
+    and ``tests/test_routing.py`` assert this).
     """
     n_envs, n = w_batch.shape[0], w_batch.shape[1]
+    if stretch_weight:
+        from repro.core.batcheval import batched_apsp
+        opt = batched_apsp(w_batch)                       # (E, N, N)
+        sw = jnp.float32(stretch_weight)
     ring_start, _, _ = _step_masks(k_rings, n)
     rt = jnp.asarray(np.tile(np.arange(n, dtype=np.int32), k_rings))  # (T,)
     start_t = jnp.repeat(starts.T, n, axis=0)            # (T, E)
@@ -319,6 +355,9 @@ def _rollout_episodes_jit(params: QParams, w_batch: jnp.ndarray,
                             eu, cu, eps, cl, n_rounds)
         dist2, adj2, new_d, reward, _ = _apply_edge(
             w_batch, dist, adj, v, a, prev_d, alpha)
+        if stretch_weight:
+            reward = reward + sw * (_stretch_potential(dist, opt)
+                                    - _stretch_potential(dist2, opt))
         act3 = active[:, None, None]
         dist = jnp.where(act3, dist2, dist)
         adj = jnp.where(act3, adj2, adj)
@@ -337,14 +376,15 @@ def _rollout_episodes_jit(params: QParams, w_batch: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k_rings", "n_rounds", "batch_size", "updates_per_step"),
+    "k_rings", "n_rounds", "batch_size", "updates_per_step",
+    "stretch_weight"),
     donate_argnames=("buf",))
 def train_epoch(params: QParams, opt_state, buf: DeviceBuffer,
                 w_batch: jnp.ndarray, gids: jnp.ndarray, starts: jnp.ndarray,
                 eps_u: jnp.ndarray, choice_u: jnp.ndarray,
                 sample_u: jnp.ndarray, eps, gamma, lr, alpha, *,
                 k_rings: int, n_rounds: int = 3, batch_size: int = 32,
-                updates_per_step: int = 1):
+                updates_per_step: int = 1, stretch_weight: float = 0.0):
     """One full training epoch (Alg. 2) fused into a single device call.
 
     Episodes over the (E, N, N) graph stack with eps-greedy actions,
@@ -356,8 +396,17 @@ def train_epoch(params: QParams, opt_state, buf: DeviceBuffer,
     ``losses`` is the per-step mean over the step's TD updates, NaN on
     steps before the buffer fills.  ``buf`` is donated — the caller must
     rebind it to the returned buffer and not reuse the argument.
+
+    ``stretch_weight`` (static, default 0.0): same optional stretch
+    shaping as :func:`rollout_episodes` — the shaped reward is what lands
+    in the replay buffer, so the Q function trains against it.  The falsy
+    default compiles to the identical unshaped program.
     """
     n_envs, n = w_batch.shape[0], w_batch.shape[1]
+    if stretch_weight:
+        from repro.core.batcheval import batched_apsp
+        opt = batched_apsp(w_batch)
+        sw = jnp.float32(stretch_weight)
     ring_start, closing, last_ring = _step_masks(k_rings, n)
     start_t = jnp.repeat(starts.T, n, axis=0)
     eps = jnp.float32(eps)
@@ -390,8 +439,12 @@ def train_epoch(params: QParams, opt_state, buf: DeviceBuffer,
         adj_prev = adj
         a = _select_actions(p, w_batch, adj, visited, v, cur_start,
                             eu, cu, eps, cl, n_rounds)
+        dist_prev = dist
         dist, adj, new_d, reward, _ = _apply_edge(
             w_batch, dist, adj, v, a, prev_d, alpha)
+        if stretch_weight:
+            reward = reward + sw * (_stretch_potential(dist_prev, opt)
+                                    - _stretch_potential(dist, opt))
         visited_next = visited.at[jnp.arange(n_envs), a].set(True)
         done = jnp.broadcast_to(cl & last, (n_envs,))
         b = jax.lax.cond(

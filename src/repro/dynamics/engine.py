@@ -77,12 +77,23 @@ _EVENT_KIND = {k: _ENGINE_EVENTS.labels(kind=k)
                          "straggler")}
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class TrajectorySample:
     time: float
     event: str
     n_live: int
     diameter: float
+    stretch: float = float("nan")    # routing-probe mean stretch (NaN = off)
+
+    def __eq__(self, other):
+        # NaN-tolerant: two replays with the probe off (stretch NaN) must
+        # still compare equal sample-for-sample
+        if not isinstance(other, TrajectorySample):
+            return NotImplemented
+        a, b = dataclasses.astuple(self), dataclasses.astuple(other)
+        return all(x == y or (x != x and y != y) for x, y in zip(a, b))
+
+    __hash__ = None
 
 
 @dataclasses.dataclass
@@ -104,6 +115,13 @@ class RunResult:
         if not self.samples:
             return float("nan")
         return float(np.max([s.diameter for s in self.samples]))
+
+    @property
+    def mean_stretch(self) -> float:
+        """Mean over the probed samples' routing stretch (NaN when the run
+        had ``route_probe=0`` or no probe ever delivered a pair)."""
+        vals = [s.stretch for s in self.samples if np.isfinite(s.stretch)]
+        return float(np.mean(vals)) if vals else float("nan")
 
 
 # ---------------------------------------------------------------------------
@@ -338,13 +356,21 @@ class ChurnEngine:
                  rebuild_threshold: int = 8, mode: str = "incremental",
                  detect_failures: bool = False,
                  swim: SwimConfig | None = None,
-                 straggler_factor: float = 3.0, seed: int = 0):
+                 straggler_factor: float = 3.0, seed: int = 0,
+                 route_probe: int = 0, route_pairs: int = 64,
+                 route_policy: str = "latency"):
         self.trace = trace
         self.policy = policy
         self.rng = np.random.default_rng(seed)
         self.swim = swim or SwimConfig()
         self.detect_failures = detect_failures
         self.straggler_factor = straggler_factor
+        # routing probe: every route_probe-th recorded sample also greedy-
+        # routes route_pairs seeded uniform pairs over the live overlay and
+        # records the mean stretch (0 = off; see probe_stretch())
+        self.route_probe = int(route_probe)
+        self.route_pairs = int(route_pairs)
+        self.route_policy = route_policy
 
         self.w_base = trace.latency()
         c = trace.capacity
@@ -408,6 +434,9 @@ class ChurnEngine:
         eng._pending = []
         eng.clock = float(clock)
         eng.events_processed = int(events_processed)
+        eng.route_probe = 0
+        eng.route_pairs = 64
+        eng.route_policy = "latency"
         return eng
 
     # -- conveniences -----------------------------------------------------
@@ -430,6 +459,48 @@ class ChurnEngine:
         policies that bypass the registry.  ``to_json()`` it next to the
         trace to snapshot exactly what a replay started from."""
         return getattr(self.policy, "initial_overlay", None)
+
+    def probe_stretch(self, n_pairs: int | None = None,
+                      policy: str | None = None) -> float:
+        """Greedy-route a seeded uniform pair batch over the LIVE overlay
+        and return the mean routing stretch over delivered pairs.
+
+        The probe is a read-only measurement: exact live-block APSP (never
+        the maintenance lower bound — a probe must not charge the router
+        for the engine's bounded staleness), ``repro.routing``'s batched
+        device router, pairs seeded by ``events_processed`` so replays
+        probe identical traffic.  NaN when fewer than 2 nodes are live or
+        nothing was delivered.  ``policy="ring"`` routes on the policy's
+        first ring (live members only); the default latency policy needs
+        no ring embedding.
+        """
+        import jax.numpy as jnp
+
+        from repro import routing
+        from repro.core.batcheval import batched_apsp
+
+        n_pairs = self.route_pairs if n_pairs is None else int(n_pairs)
+        policy = self.route_policy if policy is None else policy
+        live = self.live_ids()
+        m = len(live)
+        if m < 2 or n_pairs < 1:
+            return float("nan")
+        adjl = np.asarray(self.inc.adj, np.float32)[np.ix_(live, live)]
+        dist = np.asarray(batched_apsp(jnp.asarray(adjl)[None])[0])
+        ring = None
+        if policy == "ring":
+            pos = {int(g): i for i, g in enumerate(live)}
+            rings = getattr(self.policy, "rings", None) or [[]]
+            ring = np.asarray([pos[g] for g in rings[0] if g in pos],
+                              np.int64)
+            if ring.size < 2:
+                return float("nan")
+        res = routing.route_pairs(
+            adjl, dist, routing.sample_pairs(
+                m, n_pairs, "uniform", seed=self.events_processed),
+            policy=policy, ring=ring, hop_budget=m)
+        ok = res.success & np.isfinite(res.stretch)
+        return float(res.stretch[ok].mean()) if ok.any() else float("nan")
 
     def host_states(self) -> List[HostState]:
         """Per-slot membership view for the elastic layer (``plan_rescale``):
@@ -610,17 +681,22 @@ class ChurnEngine:
         for e in sorted(self.trace.events, key=lambda e: e.time):
             self._push(heap, e.time, e)
         samples: List[TrajectorySample] = []
+        probe = (lambda: self.probe_stretch()) if self.route_probe else \
+            (lambda: float("nan"))
         if record:
             samples.append(TrajectorySample(
                 0.0, "init", self.inc.n_live,
-                self.inc.diameter(exact=sample_exact)))
+                self.inc.diameter(exact=sample_exact), probe()))
         while heap:
             t, _, e = heapq.heappop(heap)
             self._dispatch(heap, t, e)
             if record:
+                due = (self.route_probe
+                       and self.events_processed % self.route_probe == 0)
                 samples.append(TrajectorySample(
                     t, e.kind, self.inc.n_live,
-                    self.inc.diameter(exact=sample_exact)))
+                    self.inc.diameter(exact=sample_exact),
+                    probe() if due else float("nan")))
         stats = dict(self.inc.stats)     # churn cost only: snapshot before
         final = self.inc.diameter(exact=True)  # ... the exactness refresh
         if isinstance(self.policy, DGROPolicy):

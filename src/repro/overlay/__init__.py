@@ -31,6 +31,10 @@ builder               paper section
 ``"random"``          §IV-B random K-ring (the paper's normalizer)
 ``"parallel"``        §VI Alg. 4 partitioned construction (M segments, one
                       device-batched build; constructor/stitch knobs)
+``"kleinberg"``       routing baseline: base ring + q harmonic long links
+                      per node (P ∝ 1/ringdist^exponent, Kleinberg 2000)
+``"papillon"``        routing baseline: bounded-degree deterministic
+                      butterfly long links (Abraham, Malkhi & Manku 2005)
 ====================  =====================================================
 
 New policies register with ``@overlay.register("name", config=Cfg)`` and are
@@ -40,14 +44,15 @@ without touching call sites.
 from .core import Overlay  # noqa: F401
 from .registry import build, builders, get_builder, register  # noqa: F401
 from .policies import (ChordConfig, DGROConfig, DGRODQNConfig,  # noqa: F401
-                       GAConfig, NearestRingsConfig, ParallelConfig,
-                       PerigeeConfig, RandomRingsConfig, RapidConfig,
+                       GAConfig, KleinbergConfig, NearestRingsConfig,
+                       PapillonConfig, ParallelConfig, PerigeeConfig,
+                       RandomRingsConfig, RapidConfig,
                        chord_finger_edges, nearest_neighbour_edges)
 
 __all__ = [
     "Overlay", "build", "builders", "get_builder", "register",
     "ChordConfig", "DGROConfig", "DGRODQNConfig", "GAConfig",
-    "NearestRingsConfig", "ParallelConfig", "PerigeeConfig",
-    "RandomRingsConfig", "RapidConfig",
+    "KleinbergConfig", "NearestRingsConfig", "PapillonConfig",
+    "ParallelConfig", "PerigeeConfig", "RandomRingsConfig", "RapidConfig",
     "chord_finger_edges", "nearest_neighbour_edges",
 ]

@@ -27,7 +27,8 @@ from .registry import register
 __all__ = [
     "RandomRingsConfig", "NearestRingsConfig", "ChordConfig", "RapidConfig",
     "PerigeeConfig", "DGROConfig", "DGRODQNConfig", "GAConfig",
-    "ParallelConfig", "chord_finger_edges", "nearest_neighbour_edges",
+    "ParallelConfig", "KleinbergConfig", "PapillonConfig",
+    "chord_finger_edges", "nearest_neighbour_edges",
 ]
 
 
@@ -166,6 +167,71 @@ def _build_perigee(w: np.ndarray, cfg: PerigeeConfig,
     ring = _connectivity_ring(cfg.ring, w, rng)
     return Overlay(w, (ring,), np.asarray(edges, np.intp).reshape(-1, 2),
                    policy="perigee")
+
+
+# ---------------------------------------------------------------------------
+# routing-native small-world baselines (repro.routing workloads)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KleinbergConfig:
+    """Navigable small world (Kleinberg 2000): a base connectivity ring
+    plus ``q`` long links per node, drawn with probability proportional to
+    ``ringdist^-exponent`` (exponent 1 is the harmonic distribution — the
+    greedy-routable optimum for a 1-D ring).  ``q`` defaults to
+    ceil(log2 N), matching the paper's per-node connection budget."""
+    q: Optional[int] = None
+    exponent: float = 1.0
+    ring: str = "random"
+
+
+@register("kleinberg", config=KleinbergConfig)
+def _build_kleinberg(w: np.ndarray, cfg: KleinbergConfig,
+                     rng: np.random.Generator) -> Overlay:
+    n = w.shape[0]
+    perm = _connectivity_ring(cfg.ring, w, rng)
+    if n <= 3:                       # the ring already connects everyone
+        return Overlay(w, (perm,), None, policy="kleinberg")
+    q = default_num_rings(n) if cfg.q is None else cfg.q
+    offsets = np.arange(2, n - 1)    # ring edges already cover offsets 1, n-1
+    p = np.minimum(offsets, n - offsets) ** -float(cfg.exponent)
+    p /= p.sum()
+    edges = [(int(perm[pos]), int(perm[(pos + int(off)) % n]))
+             for pos in range(n)
+             for off in rng.choice(offsets, size=q, p=p)]
+    return Overlay(w, (perm,), np.asarray(edges, np.intp).reshape(-1, 2),
+                   policy="kleinberg")
+
+
+@dataclasses.dataclass(frozen=True)
+class PapillonConfig:
+    """Papillon-style cyclic butterfly (Abraham, Malkhi & Manku 2005):
+    with arity ``k`` and L = ceil(log_k N) levels, the node at ring
+    position ``i`` (level ``i mod L``) adds deterministic long links to
+    positions ``i + j * k^(L-1-level)`` for j = 1..k — bounded degree
+    (2 ring + 2k long links), no randomness beyond the ring itself, and
+    ring-distance-greedy routable in O(log N) hops."""
+    k: int = 2
+    ring: str = "random"
+
+
+@register("papillon", config=PapillonConfig)
+def _build_papillon(w: np.ndarray, cfg: PapillonConfig,
+                    rng: np.random.Generator) -> Overlay:
+    if cfg.k < 2:
+        raise ValueError(f"papillon arity k must be >= 2, got {cfg.k}")
+    n = w.shape[0]
+    perm = _connectivity_ring(cfg.ring, w, rng)
+    levels = max(1, int(np.ceil(np.log(max(n, 2)) / np.log(cfg.k))))
+    edges = []
+    for pos in range(n):
+        stride = cfg.k ** (levels - 1 - (pos % levels))
+        for j in range(1, cfg.k + 1):
+            tgt = (pos + j * stride) % n
+            if tgt != pos:
+                edges.append((int(perm[pos]), int(perm[tgt])))
+    extra = np.asarray(edges, np.intp).reshape(-1, 2) if edges else None
+    return Overlay(w, (perm,), extra, policy="papillon")
 
 
 # ---------------------------------------------------------------------------

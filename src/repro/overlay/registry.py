@@ -70,9 +70,10 @@ def get_builder(name: str) -> BuilderSpec:
     try:
         return _REGISTRY[name]
     except KeyError:
+        # sorted, comma-joined: a stable message tests/docs can rely on
         raise ValueError(
             f"unknown overlay builder {name!r}; registered builders: "
-            f"{sorted(_REGISTRY)}") from None
+            f"{', '.join(sorted(_REGISTRY))}") from None
 
 
 def build(name: str, w: np.ndarray, cfg=None, *,
@@ -83,6 +84,19 @@ def build(name: str, w: np.ndarray, cfg=None, *,
     ``cfg`` is the builder's config dataclass instance; when omitted, the
     default config is built with ``overrides`` applied as field values.
     Randomness comes from ``rng`` (or ``np.random.default_rng(seed)``).
+
+    Beyond the paper's diameter-oriented builders (``"dgro"``,
+    ``"dgro-dqn"``, ``"chord"``, ``"rapid"``, ``"perigee"``, ``"ga"``,
+    ``"nearest"``, ``"random"``, ``"parallel"``), two routing-native
+    small-world baselines back the ``repro.routing`` workloads:
+
+    * ``"kleinberg"`` — base ring + ``q`` long links per node drawn with
+      probability ∝ ``1/ringdist^exponent`` (harmonic at the default
+      exponent 1.0, the greedy-routable optimum for a 1-D ring);
+    * ``"papillon"`` — deterministic bounded-degree cyclic-butterfly long
+      links (arity ``k``), ring-greedy routable in O(log N) hops.
+
+    ``builders()`` lists everything currently registered.
     """
     spec = get_builder(name)
     if cfg is not None and overrides:

@@ -312,11 +312,21 @@ class ServiceState:
         """Distance + greedy next-hop path from the maintained matrix.
 
         The distance is exact when no deletions are pending, otherwise a
-        provable lower bound.  The path is reconstructed by greedy next-hop
-        descent over ``adj[u, v] + D[v, dst]``; under a stale matrix the
-        descent can dead-end, in which case ``path`` is ``None`` and only
-        the distance bound is served.
+        provable lower bound.  The path comes from the SHARED greedy
+        router (``repro.routing.route_single_host`` — the same float32
+        next-hop rule as the device batch router and the fig19
+        benchmark): latency-greedy descent over ``adj[u, v] + D[v, dst]``.
+        Under a stale matrix the descent can dead-end or exhaust its hop
+        budget, in which case ``path`` is ``None`` and only the distance
+        bound is served.
+
+        Response keys beyond the original contract (additive only):
+        ``hops`` (path edge count, ``None`` when undelivered), ``stretch``
+        (delivered latency / served distance — >= 1 against a lower
+        bound), and ``hop_bounds`` (per-hop ``"exact"``/``"lower"`` stamp
+        of the distance estimate that guided the descent).
         """
+        from repro.routing import record_route, route_single_host
         with self.lock:
             self._count_query("route")
             inc = self.engine.inc
@@ -327,32 +337,31 @@ class ServiceState:
                 if not inc.alive[u]:
                     raise ValueError(f"{name}={u} is not a live node")
             D = inc.distances
-            adj = inc.adj
             d = float(D[src, dst])
             reachable = d < float(INF) / 2
             stale = inc.pending_deletions > 0
+            bound = "lower" if stale else "exact"
             path: Optional[List[int]] = None
+            hops: Optional[int] = None
+            stretch: Optional[float] = None
             if reachable:
-                hops = [src]
-                u, visited = src, {src}
-                while u != dst and len(hops) <= inc.n_live:
-                    nbrs = [int(v) for v in np.flatnonzero(is_edge(adj[u]))
-                            if int(v) not in visited]
-                    if not nbrs:
-                        break
-                    v = min(nbrs, key=lambda x: float(adj[u, x] + D[x, dst]))
-                    if float(adj[u, v] + D[v, dst]) >= float(INF) / 2:
-                        break
-                    hops.append(v)
-                    visited.add(v)
-                    u = v
-                if u == dst:
-                    path = hops
+                walk, lat, n_hops, outcome = route_single_host(
+                    np.asarray(inc.adj, np.float32),
+                    np.asarray(D[:, dst], np.float32), src, dst,
+                    policy="latency", hop_budget=int(inc.n_live))
+                if outcome == "delivered":
+                    path, hops = walk, n_hops
+                    stretch = float(lat) / d if d > 0 else 1.0
+            else:
+                outcome = "unreachable"
+            record_route("latency", outcome, hops)
             return {"src": src, "dst": dst,
                     "distance": d if reachable else None,
                     "reachable": reachable, "stale": stale,
-                    "bound": "lower" if stale else "exact",
-                    "path": path, "version": self.version}
+                    "bound": bound, "path": path,
+                    "hops": hops, "stretch": stretch,
+                    "hop_bounds": [bound] * hops if hops else None,
+                    "version": self.version}
 
     def adjacency(self) -> Dict:
         with self.lock:

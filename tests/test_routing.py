@@ -1,0 +1,282 @@
+"""repro.routing: batched greedy router, workloads, summaries, probes."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import overlay, routing
+from repro.core.diameter import INF, adjacency_from_edges, ring_edges
+from repro.core.topology import DISTRIBUTIONS, N_FABRIC_SITES, make_latency
+from repro.dynamics import POLICIES as DYN_POLICIES
+from repro.dynamics import ChurnEngine
+from repro.dynamics.scenarios import poisson_churn
+from repro.obs import REGISTRY, parse_prometheus
+
+N = 16
+
+# overrides that keep every builder cheap enough for a 4-distribution sweep
+# (dgro-dqn skips training: the construction-only vmapped rollout is what
+# routing exercises, and train_epoch's fused scan is compile-heavy)
+FAST_CFG = {
+    "ga": dict(k_rings=2, population=8, budget=32),
+    "parallel": dict(m=2, extra_random=0),
+    "dgro-dqn": dict(k=2, epochs=0, n_starts=2),
+}
+
+
+def _build(name, w, seed=0):
+    return overlay.build(name, w, seed=seed, **FAST_CFG.get(name, {}))
+
+
+def _chord_fabric(n, seed=0, dist="bitnode"):
+    ov = overlay.build("chord", make_latency(dist, n, seed=seed), seed=seed)
+    return (np.asarray(ov.adjacency, np.float32),
+            np.asarray(ov.distances(), np.float32), np.asarray(ov.rings[0]))
+
+
+# ---------------------------------------------------------------------------
+# properties over every registered builder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", sorted(DISTRIBUTIONS))
+def test_every_builder_routes_every_pair(dist):
+    """Acceptance: all registered builders x all latency distributions —
+    greedy routing succeeds on the connected overlay under BOTH policies
+    and stretch is >= 1; the latency policy descends an exact potential,
+    so it follows a shortest path (stretch == 1)."""
+    w = make_latency(dist, N, seed=3)
+    pairs = routing.sample_pairs(N, 64, "uniform", seed=5)
+    for name in sorted(overlay.builders()):
+        ov = _build(name, w, seed=1)
+        assert ov.is_connected(), (name, dist)
+        for policy in routing.POLICIES:
+            res = routing.route_overlay(ov, pairs, policy=policy)
+            assert res.success.all(), (name, dist, policy)
+            assert not res.failed.any(), (name, dist, policy)
+            assert np.all(res.stretch >= 1 - 1e-4), (name, dist, policy)
+            if policy == "latency":
+                assert np.all(res.stretch <= 1 + 1e-3), (name, dist)
+
+
+def test_batched_router_matches_host_reference():
+    """The device scan and the numpy per-pair loop agree bit-for-bit on
+    hops, latency, and outcome flags at a fixed seed (the fig19 parity
+    gate, at test scale)."""
+    adj, dist, ring = _chord_fabric(24)
+    pairs = routing.sample_pairs(24, 128, "uniform", seed=1)
+    for policy in routing.POLICIES:
+        dev = routing.route_pairs(adj, dist, pairs, policy=policy, ring=ring)
+        host = routing.route_pairs_host(adj, dist, pairs, policy=policy,
+                                        ring=ring)
+        for field in ("hops", "latency", "success", "failed"):
+            assert np.array_equal(getattr(dev, field),
+                                  getattr(host, field)), (policy, field)
+
+
+# ---------------------------------------------------------------------------
+# termination
+# ---------------------------------------------------------------------------
+
+def test_masked_termination_respects_hop_budget():
+    """On a pure ring, the antipodal pair needs exactly n/2 hops: one more
+    budget delivers it, one less freezes at the budget (exhausted, never
+    beyond), and the host reference agrees."""
+    n = 16
+    perm = np.arange(n)
+    adj = adjacency_from_edges(make_latency("uniform", n, seed=0),
+                               ring_edges(perm))
+    pairs = np.array([[0, 8]])
+    full = routing.route_pairs(adj, None, pairs, policy="ring", ring=perm,
+                               hop_budget=8)
+    assert full.success.all() and full.hops[0] == 8
+    cut = routing.route_pairs(adj, None, pairs, policy="ring", ring=perm,
+                              hop_budget=7)
+    assert not cut.success[0] and not cut.failed[0]
+    assert cut.hops[0] == 7 and cut.outcome(0) == "exhausted"
+    keys = routing.ring_distance_keys(perm, pairs[:, 1])
+    path, _, hops, outcome = routing.route_single_host(
+        adj, keys[0], 0, 8, policy="ring", hop_budget=7)
+    assert outcome == "exhausted" and hops == 7 and len(path) == 8
+
+
+def test_disconnected_cross_pairs_dead_end():
+    """Cross-component pairs dead-end immediately (INF potential on every
+    neighbour) and don't count against success_rate, which only charges
+    the router for reachable pairs."""
+    from repro.core.batcheval import batched_apsp
+
+    n = 12
+    w = make_latency("uniform", n, seed=2)
+    edges = list(ring_edges(np.arange(6))) + list(ring_edges(np.arange(6, n)))
+    adj = np.asarray(adjacency_from_edges(w, edges), np.float32)
+    dist = np.asarray(batched_apsp(jnp.asarray(adj)[None])[0], np.float32)
+    assert dist[0, 9] >= float(INF) / 2          # really partitioned
+    res = routing.route_pairs(adj, dist, np.array([[0, 9], [1, 4]]),
+                              policy="latency")
+    assert not res.success[0] and res.failed[0]
+    assert res.outcome(0) == "dead_end" and res.hops[0] == 0
+    assert np.isnan(res.stretch[0])
+    assert res.success[1]
+    s = routing.summarize(res, builder="two-rings", workload="uniform",
+                          policy="latency", n=n, hop_budget=n)
+    assert s.success_rate == 1.0                 # 1 delivered / 1 reachable
+
+
+# ---------------------------------------------------------------------------
+# workload sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_pairs_deterministic_distinct_in_range():
+    for kind in routing.WORKLOADS:
+        a = routing.sample_pairs(40, 200, kind, seed=7)
+        assert np.array_equal(a, routing.sample_pairs(40, 200, kind, seed=7))
+        assert not np.array_equal(a, routing.sample_pairs(40, 200, kind,
+                                                          seed=8))
+        assert a.shape == (200, 2)
+        assert (a[:, 0] != a[:, 1]).all(), kind
+        assert a.min() >= 0 and a.max() < 40
+    with pytest.raises(ValueError, match="unknown workload"):
+        routing.sample_pairs(40, 10, "nope")
+    with pytest.raises(ValueError, match=">= 2 nodes"):
+        routing.sample_pairs(1, 10)
+
+
+def test_hotspot_concentrates_and_regional_localizes():
+    hot = routing.sample_pairs(64, 600, "hotspot", seed=0)
+    _, counts = np.unique(hot[:, 1], return_counts=True)
+    assert np.sort(counts)[-4:].sum() / 600 >= 0.6   # frac=0.8 on 4 hotspots
+    same_site = lambda p: float(  # noqa: E731
+        ((p[:, 0] % N_FABRIC_SITES) == (p[:, 1] % N_FABRIC_SITES)).mean())
+    reg = same_site(routing.sample_pairs(64, 600, "regional", seed=0))
+    uni = same_site(routing.sample_pairs(64, 600, "uniform", seed=0))
+    assert reg >= 0.6 and reg > uni + 0.2            # locality=0.8 vs 1/sites
+
+
+# ---------------------------------------------------------------------------
+# summaries + observability instruments
+# ---------------------------------------------------------------------------
+
+def test_routing_summary_serde_roundtrip():
+    adj, dist, ring = _chord_fabric(12)
+    res = routing.route_pairs(adj, dist,
+                              routing.sample_pairs(12, 32, "hotspot", seed=1),
+                              policy="latency", ring=ring)
+    s = routing.summarize(res, builder="chord", workload="hotspot",
+                          policy="latency", n=12, hop_budget=12)
+    assert s.success_rate == 1.0 and s.stretch_mean >= 1 - 1e-4
+    assert routing.RoutingSummary.from_json(s.to_json()) == s
+    with pytest.raises(ValueError, match="routing_summary"):
+        routing.RoutingSummary.from_json(
+            s.to_json().replace("routing_summary", "other_kind"))
+
+
+def test_route_instruments_land_in_the_scrape():
+    """record_route / record_route_batch bump the SAME process-global
+    instruments the service scrape serves (absolute-delta asserted, since
+    other tests may have recorded already)."""
+    def scrape():
+        return parse_prometheus(REGISTRY.render_prometheus())
+
+    adj, dist, ring = _chord_fabric(12)
+    res = routing.route_pairs(adj, dist,
+                              routing.sample_pairs(12, 16, "uniform", seed=2),
+                              policy="ring", ring=ring)
+    assert res.success.all()
+    before = scrape()
+    routing.record_route_batch("ring", res)
+    routing.record_route("latency", "unreachable")
+    after = scrape()
+    delivered = (("outcome", "delivered"), ("policy", "ring"))
+    unreachable = (("outcome", "unreachable"), ("policy", "latency"))
+    reqs0 = before.get("repro_route_requests_total", {})
+    reqs1 = after["repro_route_requests_total"]
+    assert reqs1[delivered] - reqs0.get(delivered, 0) == res.n_pairs
+    assert reqs1[unreachable] - reqs0.get(unreachable, 0) == 1
+    hops0 = before.get("repro_route_hops_count", {}).get((), 0)
+    assert after["repro_route_hops_count"][()] - hops0 == res.n_pairs
+
+
+# ---------------------------------------------------------------------------
+# rollout reward shaping stays opt-in
+# ---------------------------------------------------------------------------
+
+def test_rollout_stretch_weight_zero_is_bit_identical():
+    from repro.core import rollout
+    from repro.core.embedding import init_qparams
+
+    n, k, n_envs = 8, 2, 2
+    params = init_qparams(jax.random.PRNGKey(0), 8, 16)
+    ws = jnp.asarray(np.stack([make_latency("uniform", n, seed=i)
+                               for i in range(n_envs)]), jnp.float32)
+    plan = rollout.make_plan(np.random.default_rng(0), n_envs, k, n)
+    args = (params, ws, jnp.asarray(plan.starts), jnp.asarray(plan.eps_u),
+            jnp.asarray(plan.choice_u), 0.3, 0.1)
+    base = rollout.rollout_episodes(*args, k_rings=k, n_rounds=2)
+    zero = rollout.rollout_episodes(*args, k_rings=k, n_rounds=2,
+                                    stretch_weight=0.0)
+    shaped = rollout.rollout_episodes(*args, k_rings=k, n_rounds=2,
+                                      stretch_weight=0.5)
+    for a, b in zip(base, zero):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(base[1]), np.asarray(shaped[1]))
+
+
+# ---------------------------------------------------------------------------
+# churn-engine routing probe
+# ---------------------------------------------------------------------------
+
+def test_churn_probe_stretch_stays_finite_under_poisson():
+    trace = poisson_churn(n0=16, dist="uniform", seed=0, horizon=10_000.0,
+                          join_rate=1e-3, leave_rate=1e-3, min_live=8)
+    eng = ChurnEngine(trace, DYN_POLICIES["dgro"](), seed=1,
+                      detect_failures=True, route_probe=2, route_pairs=16)
+    res = eng.run()
+    probed = [s.stretch for s in res.samples if np.isfinite(s.stretch)]
+    assert probed, "probe recorded no finite stretch samples"
+    assert all(v >= 1 - 1e-4 for v in probed)
+    assert np.isfinite(res.mean_stretch) and res.mean_stretch >= 1 - 1e-4
+    # probe off (the default): the column stays NaN and so does the mean
+    res_off = ChurnEngine(trace, DYN_POLICIES["dgro"](), seed=1,
+                          detect_failures=True).run()
+    assert all(not np.isfinite(s.stretch) for s in res_off.samples)
+    assert not np.isfinite(res_off.mean_stretch)
+
+
+# ---------------------------------------------------------------------------
+# integration seams: registry message, service response, benchmark gate
+# ---------------------------------------------------------------------------
+
+def test_unknown_builder_message_is_sorted_and_comma_joined():
+    with pytest.raises(ValueError) as exc:
+        overlay.build("does-not-exist", make_latency("uniform", 8, seed=0))
+    assert ", ".join(sorted(overlay.builders())) in str(exc.value)
+
+
+def test_service_route_response_carries_routing_fields():
+    from repro.dynamics import Trace
+    from repro.service.state import ServiceState
+
+    world = Trace(n0=12, capacity=24, dist="bitnode", seed=3, events=[],
+                  name="routing-test-world")
+    state = ServiceState.fresh(world, policy="dgro", seed=0)
+    r = state.route(0, 7)
+    assert r["reachable"] and r["bound"] == "exact"
+    assert r["path"] is not None and r["hops"] == len(r["path"]) - 1
+    assert r["stretch"] == pytest.approx(1.0, rel=1e-3)   # exact matrix
+    assert r["hop_bounds"] == ["exact"] * r["hops"]
+
+
+def test_fig19_gate_is_registered_in_the_harness():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, root)
+    try:
+        from benchmarks.run import GATES
+    finally:
+        sys.path.remove(root)
+    gate = GATES["fig19-routing"]
+    assert gate.hard and gate.key == "passes_gate"
+    assert gate.bench_file == "BENCH_fig19_routing.json"

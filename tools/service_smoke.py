@@ -78,6 +78,14 @@ def main() -> None:
         assert r["reachable"] and r["distance"] > 0
         assert r["path"] is None or (r["path"][0] == nodes[0]
                                      and r["path"][-1] == nodes[-1])
+        # enriched routing keys (shared repro.routing router)
+        if r["path"] is not None:
+            assert r["hops"] == len(r["path"]) - 1, r
+            # served distance is exact or a lower bound -> stretch >= 1
+            assert r["stretch"] >= 1 - 1e-5, r
+            assert r["hop_bounds"] == [r["bound"]] * r["hops"], r
+        else:
+            assert r["hops"] is None and r["stretch"] is None, r
 
         c.reoptimize()
         snap = c.snapshot()
@@ -96,6 +104,13 @@ def main() -> None:
                     ("status", "200"))
         assert reqs[post_key] == (len(events) + 9) // 10, reqs
         assert scraped["repro_service_n_live"][()] == st["n_live"]
+        # the shared routing instruments: exactly one /v1/route was served
+        route_reqs = scraped["repro_route_requests_total"]
+        assert sum(route_reqs.values()) == 1, route_reqs
+        if r["path"] is not None:
+            key = (("outcome", "delivered"), ("policy", "latency"))
+            assert route_reqs[key] == 1, route_reqs
+            assert scraped["repro_route_hops_count"][()] == 1, scraped
 
         c.shutdown()
         rc = proc.wait(timeout=30)
