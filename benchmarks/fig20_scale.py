@@ -1,0 +1,195 @@
+"""APSP/diameter scaling curve: the streamed engine at N=4096+.
+
+Sweeps graph size N at a fixed candidate batch B and measures end-to-end
+diameter throughput through the streaming facade
+(``batcheval.diameters_of_rings``: chunked assembly -> chunked APSP ->
+host reduction), recording for every cell the facts the memory model
+claims: resolved method, chunk, modeled peak working-set bytes, device
+call count, and the process high-water mark (``ru_maxrss``).
+
+Three HARD gates (all at CI-affordable sizes, enforced by
+``benchmarks.run``):
+
+  * **bit parity** — the streamed facade (small chunks, padded trailing
+    block) returns EXACTLY the same bits as one direct
+    ``batched_diameter`` call over the whole stack — the pre-engine code
+    path — at N <= 256 (``np.array_equal``, no tolerance);
+  * **tiled parity** — the blocked (tiled) Floyd-Warshall method agrees
+    with the auto method to float32 round-off on the same stack;
+  * **memory bound** — at the largest swept N the modeled working set is
+    a fraction of the dense (B, N, N) stack (the facade streams; it never
+    materializes the batch), and the streamed chunk is smaller than B.
+
+Reduced-precision evaluation (bfloat16 compute, int16-quantized
+latencies) is measured against the exact float32 result and reported
+informationally in the JSON artifact.
+
+The acceptance cell — B=64 at N=4096 on a single CPU host — is the
+default ``__main__`` invocation:
+
+    PYTHONPATH=src python -m benchmarks.fig20_scale --ns 256 1024 4096 --b 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import time
+
+import numpy as np
+
+from repro.core import batcheval
+from repro.core.topology import make_latency
+
+
+def _genomes(rng, n: int, b: int, k_rings: int = 2) -> np.ndarray:
+    return np.stack([[rng.permutation(n) for _ in range(k_rings)]
+                     for _ in range(b)])
+
+
+def _gates(n: int, b: int, seed: int) -> dict:
+    """Parity + memory gates at a small, always-affordable size."""
+    rng = np.random.default_rng(seed)
+    # gaussian: continuous weights, so the reduced-precision errors below
+    # are real (integer-valued worlds sum exactly in bf16)
+    w = make_latency("gaussian", n, seed=seed + n)
+    genomes = _genomes(rng, n, b)
+    adjs = batcheval.adjacency_batch_from_rings(w, genomes)
+
+    # the pre-engine path: one jit'd batched_diameter over the whole stack
+    ref = np.asarray(batcheval.batched_diameter(adjs))
+    one_shot = np.asarray(batcheval.diameters(adjs))
+    streamed = np.asarray(batcheval.diameters(adjs, chunk=max(1, b // 4)))
+    from_rings = np.asarray(batcheval.diameters_of_rings(
+        w, genomes, chunk=max(1, b // 4)))
+    parity = (np.array_equal(ref, one_shot)
+              and np.array_equal(ref, streamed)
+              and np.array_equal(ref, from_rings))
+
+    tiled = np.asarray(batcheval.diameters(adjs, method="tiled"))
+    tiled_ok = bool(np.allclose(ref, tiled, rtol=1e-5, atol=1e-4))
+
+    # memory boundedness, forced: a budget worth ~4 matrices of temporaries
+    # must make the facade stream (chunk < B), stay inside the modeled
+    # working set, and STILL return the exact same bits
+    budget = 4 * n * n * 4 * 8
+    with batcheval.eval_options(budget_bytes=budget):
+        under_budget = np.asarray(batcheval.diameters(adjs))
+    rep = batcheval.last_eval_report()
+    budget_ok = (rep["chunk"] < b and rep["workingset_bytes"] <= budget
+                 and np.array_equal(ref, under_budget))
+
+    # reduced precision, measured against the exact result (informational)
+    bf16 = np.asarray(batcheval.diameters(adjs, dtype="bfloat16"))
+    bf16_err = float(np.max(np.abs(bf16 - ref) / np.maximum(ref, 1e-9)))
+    bf16_rep = batcheval.last_eval_report()
+    i16 = np.asarray(batcheval.diameters(adjs, dtype="int16"))
+    i16_err = float(np.max(np.abs(i16 - ref) / np.maximum(ref, 1e-9)))
+    i16_rep = batcheval.last_eval_report()
+
+    return {
+        "parity_n": n, "parity_b": b,
+        "parity_bitexact": bool(parity),
+        "tiled_allclose": tiled_ok,
+        "budget_streaming_ok": bool(budget_ok),
+        "budget_bytes_forced": budget,
+        "budget_chunk": rep["chunk"],
+        "bf16_max_rel_err": bf16_err,
+        "bf16_fallback": bool(bf16_rep.get("fallback")),
+        "int16_max_rel_err": i16_err,
+        "int16_fallback": bool(i16_rep.get("fallback")),
+    }
+
+
+def _cell(n: int, b: int, seed: int, b_cap: int | None) -> dict:
+    """One scaling cell: streamed diameters over B ring genomes at size N."""
+    rng = np.random.default_rng(seed + n)
+    w = make_latency("uniform", n, seed=seed + n)
+    b_timed = b if (b_cap is None or n < 2048) else min(b, b_cap)
+    genomes = _genomes(rng, n, b_timed)
+    if n <= 1024:                              # warm the jit cache; at larger
+        batcheval.diameters_of_rings(w, genomes[:1])   # N one pass is the run
+    t0 = time.perf_counter()
+    out = batcheval.diameters_of_rings(w, genomes)
+    dt = time.perf_counter() - t0
+    rep = batcheval.last_eval_report()
+    assert np.all(np.isfinite(out)), f"non-finite diameter at N={n}"
+    return {
+        "n": n, "b": b, "b_timed": b_timed,
+        "seconds": dt * (b / b_timed),
+        "diam_per_s": b_timed / dt,
+        "method": rep.get("method"),
+        "chunk": rep.get("chunk"),
+        "device_calls": rep.get("device_calls"),
+        "workingset_bytes": rep.get("workingset_bytes"),
+        "dense_stack_bytes": int(b) * n * n * 4,
+        "ru_maxrss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        // 1024,
+    }
+
+
+def run(ns=(256, 1024, 4096), b: int = 64, seed: int = 0,
+        parity_n: int = 256, b_cap: int | None = None,
+        out_json: str = "BENCH_fig20_scale.json"):
+    """Returns the harness row; prints one CSV line per N cell.
+
+    ``b_cap`` bounds how many candidates cells at N >= 2048 actually time
+    (throughput extrapolated linearly) so the harness full sweep stays
+    CI-affordable; the acceptance run passes ``b_cap=None``.
+    """
+    t0 = time.time()
+    gate = _gates(min(parity_n, 256), min(b, 64), seed)
+    print(f"# parity@N={gate['parity_n']}: "
+          f"bitexact={gate['parity_bitexact']} "
+          f"tiled={gate['tiled_allclose']} "
+          f"bf16_err={gate['bf16_max_rel_err']:.2e} "
+          f"int16_err={gate['int16_max_rel_err']:.2e}")
+
+    print("N,B,diam_per_s,seconds,method,chunk,workingset_mb,dense_stack_mb,"
+          "ru_maxrss_mb")
+    cells = []
+    for n in ns:
+        c = _cell(n, b, seed, b_cap)
+        cells.append(c)
+        print(f"{c['n']},{c['b']},{c['diam_per_s']:.2f},{c['seconds']:.1f},"
+              f"{c['method']},{c['chunk']},"
+              f"{c['workingset_bytes'] / 2**20:.0f},"
+              f"{c['dense_stack_bytes'] / 2**20:.0f},{c['ru_maxrss_mb']}")
+
+    # when the top cell actually streams (chunk < B), its modeled working
+    # set must be a fraction of the dense stack; when B fits one chunk the
+    # forced-budget gate above already proved the streaming path
+    top = cells[-1]
+    streams = top["chunk"] < b
+    mem_ok = gate["budget_streaming_ok"] and (
+        not streams or top["workingset_bytes"] < top["dense_stack_bytes"] / 2)
+    gate["largest_n"] = top["n"]
+    gate["largest_n_diam_per_s"] = top["diam_per_s"]
+    gate["memory_bounded"] = bool(mem_ok)
+
+    results = {"gate": gate, "cells": cells, "b": b, "ns": list(ns)}
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
+    wall = time.time() - t0
+    passes = (gate["parity_bitexact"] and gate["tiled_allclose"]
+              and gate["memory_bounded"])
+    return {"name": "fig20-scale",
+            "us_per_call": wall * 1e6 / max(1, len(cells)),
+            "derived": f"N={top['n']} B={b}: {top['diam_per_s']:.2f} diam/s, "
+                       f"ws {top['workingset_bytes'] / 2**20:.0f}MB vs dense "
+                       f"{top['dense_stack_bytes'] / 2**20:.0f}MB; "
+                       f"parity={gate['parity_bitexact']}",
+            "passes_gate": passes}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", type=int, nargs="+", default=[256, 1024, 4096])
+    ap.add_argument("--b", type=int, default=64)
+    ap.add_argument("--b-cap", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-json", default="BENCH_fig20_scale.json")
+    args = ap.parse_args()
+    print(run(tuple(args.ns), b=args.b, b_cap=args.b_cap, seed=args.seed,
+              out_json=args.out_json))

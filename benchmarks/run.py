@@ -91,6 +91,12 @@ GATES = {
                           key="passes_gate",
                           bench_file="BENCH_fig19_routing.json",
                           bench_metric="gate.speedup"),
+    "fig20-scale": Gate("streamed facade bit-identical to the pre-engine "
+                        "direct path at N<=256, tiled FW parity, and peak "
+                        "working set < dense (B,N,N)/2 at the largest N",
+                        key="passes_gate",
+                        bench_file="BENCH_fig20_scale.json",
+                        bench_metric="gate.largest_n_diam_per_s"),
     "roofline": Gate("informational: kernel roofline table renders"),
 }
 
@@ -138,7 +144,8 @@ def main() -> None:
                             fig11_ring_selection, fig12_ring_ablation,
                             fig13_kring_compare, fig14_parallel,
                             fig15_batcheval, fig16_churn, fig17_service,
-                            fig18_obs, fig19_routing, roofline_table)
+                            fig18_obs, fig19_routing, fig20_scale,
+                            roofline_table)
 
     fast = args.fast
     jobs = [
@@ -197,6 +204,13 @@ def main() -> None:
         ("fig19-routing", lambda: fig19_routing.run(
             matrix_n=64 if fast else 256,
             matrix_pairs=128 if fast else 256)),
+        # the parity + memory gates always run at N=256, B<=64; --fast
+        # shrinks the scaling sweep, full caps the timed candidates at
+        # N>=2048 (the honest B=64 N=4096 cell is the module's __main__)
+        ("fig20-scale", lambda: fig20_scale.run(
+            ns=(64, 128, 256) if fast else (256, 1024, 4096),
+            b=16 if fast else 64,
+            b_cap=None if fast else 8)),
         ("roofline", roofline_table.run),
     ]
 

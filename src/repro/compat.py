@@ -16,7 +16,7 @@ import jax
 from jax.sharding import AbstractMesh, Mesh
 
 __all__ = ["shard_map", "make_mesh", "mesh_from_devices", "abstract_mesh",
-           "auto_axis_types", "axis_size"]
+           "auto_axis_types", "axis_size", "named_sharding"]
 
 try:  # jax >= 0.6: top-level export
     from jax import shard_map as _shard_map_impl
@@ -77,6 +77,15 @@ def axis_size(axis_name: str) -> int:
         return int(jax.lax.axis_size(axis_name))
     frame = jax.core.axis_frame(axis_name)
     return int(getattr(frame, "size", frame))
+
+
+def named_sharding(mesh: Mesh, *spec):
+    """``NamedSharding(mesh, PartitionSpec(*spec))`` — placing a host batch
+    explicitly before a shard_map call avoids the implicit broadcast-then-
+    reshard transfer some jax versions emit for unsharded inputs."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return NamedSharding(mesh, PartitionSpec(*spec))
 
 
 def abstract_mesh(axis_shapes: Sequence[int],

@@ -164,7 +164,17 @@ def relax_edge_update(dist: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
 
 def largest_cc_diameter(d: jnp.ndarray) -> jnp.ndarray:
     """Diameter of the largest connected component given APSP distances
-    (paper §IV-C).  Shared by the unbatched path and ``core.batcheval``."""
+    (paper §IV-C).  Shared by the unbatched path and ``core.batcheval``.
+
+    Accepts reduced-precision distance matrices (the bf16 / int16-quantized
+    eval paths in ``batcheval``): the comparison runs in float32, and the
+    ``INF / 2`` threshold keeps the sentinel provable under quantization —
+    bf16 rounds the 1e9 sentinel to ~9.98e8 and the int16 grid leaves it
+    untouched by construction, both comfortably above 5e8, while any REAL
+    path cost that neared 5e8 would long since have overflowed the latency
+    model's scale.  Always returns float32.
+    """
+    d = d.astype(jnp.float32)
     finite = d < INF / 2
     sizes = jnp.sum(finite, axis=1)
     anchor = jnp.argmax(sizes)          # a node in the largest component

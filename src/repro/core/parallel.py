@@ -295,7 +295,8 @@ def _greedy_chain(w: np.ndarray, segs: List[np.ndarray],
 
 def stitch_segments(w: np.ndarray, segments: Sequence[np.ndarray],
                     stitch: str = "naive", n_candidates: int = 16,
-                    seed: int = 0) -> np.ndarray:
+                    seed: int = 0,
+                    eval_opts: Optional[dict] = None) -> np.ndarray:
     """Merge per-partition segments into one ring permutation.
 
     ``"naive"``: concatenate in partition order (Alg. 4 line 14 — segment
@@ -326,12 +327,14 @@ def stitch_segments(w: np.ndarray, segments: Sequence[np.ndarray],
             _orient(s, int(rng.integers(len(s))), bool(rng.integers(2)))
             for s in segs]))
     rings = np.stack(cands)
-    scores = batcheval.diameters_of_rings(w, rings[:, None, :])
+    with batcheval.eval_options(**(eval_opts or {})):
+        scores = batcheval.diameters_of_rings(w, rings[:, None, :])
     return rings[int(np.argmin(scores))]
 
 
 def score_partition_blocks(w: np.ndarray,
-                           segments: Sequence[np.ndarray]) -> np.ndarray:
+                           segments: Sequence[np.ndarray],
+                           eval_opts: Optional[dict] = None) -> np.ndarray:
     """Per-partition ring diameters, all non-empty blocks in ONE padded
     device batch (padded nodes are isolated singletons the largest-CC rule
     ignores).
@@ -350,7 +353,9 @@ def score_partition_blocks(w: np.ndarray,
         seg = segments[i]
         sub_w = w[np.ix_(seg, seg)]
         blocks.append(adjacency_from_rings(sub_w, [np.arange(len(seg))]))
-    scores[idx] = batcheval.diameters(batcheval.pad_adjacency_blocks(blocks))
+    with batcheval.eval_options(**(eval_opts or {})):
+        scores[idx] = batcheval.diameters(
+            batcheval.pad_adjacency_blocks(blocks))
     return scores
 
 
@@ -373,7 +378,8 @@ def _build_segments_many(w: np.ndarray, plans: Sequence[PartitionPlan],
 def parallel_rings(w: np.ndarray, m: int, seeds: Sequence[int],
                    constructor: str = "nearest", stitch: str = "naive",
                    n_stitch_candidates: int = 16,
-                   dqn: Optional[SegmentDQNConfig] = None) -> List[np.ndarray]:
+                   dqn: Optional[SegmentDQNConfig] = None,
+                   eval_opts: Optional[dict] = None) -> List[np.ndarray]:
     """B independent Algorithm-4 builds in ONE device call.
 
     All ``len(seeds) * M`` partition segments go through a single fused
@@ -392,7 +398,8 @@ def parallel_rings(w: np.ndarray, m: int, seeds: Sequence[int],
         return _nearest_merged_naive(w, plans)
     many = _build_segments_many(w, plans, constructor, dqn)
     return [stitch_segments(w, segs, stitch=stitch,
-                            n_candidates=n_stitch_candidates, seed=int(s))
+                            n_candidates=n_stitch_candidates, seed=int(s),
+                            eval_opts=eval_opts)
             for segs, s in zip(many, seeds)]
 
 
@@ -401,6 +408,7 @@ def parallel_ring_scored(
         constructor: str = "nearest", stitch: str = "naive",
         n_stitch_candidates: int = 16,
         dqn: Optional[SegmentDQNConfig] = None,
+        eval_opts: Optional[dict] = None,
 ) -> Tuple[np.ndarray, np.ndarray | None]:
     """Algorithm 4 on the device-batched engine + optional quality signal.
 
@@ -414,8 +422,10 @@ def parallel_ring_scored(
     plan = plan_partitions(w.shape[0], m, rng)
     segments = _build_segments_many(w, [plan], constructor, dqn)[0]
     ring = stitch_segments(w, segments, stitch=stitch,
-                           n_candidates=n_stitch_candidates, seed=seed)
-    scores = score_partition_blocks(w, segments) if score_blocks else None
+                           n_candidates=n_stitch_candidates, seed=seed,
+                           eval_opts=eval_opts)
+    scores = (score_partition_blocks(w, segments, eval_opts=eval_opts)
+              if score_blocks else None)
     return ring, scores
 
 

@@ -290,10 +290,18 @@ class IncrementalDistances:
             self.rebuild()
 
     def rebuild(self) -> None:
-        """Full from-scratch APSP over the live adjacency, one batched
-        ``batcheval`` device call; resets the staleness counter."""
+        """Full from-scratch APSP over the live adjacency via the
+        instrumented ``batcheval`` engine; resets the staleness counter.
+
+        Precision is PINNED to float32 regardless of ambient
+        ``eval_options`` / ``REPRO_APSP_*`` overrides: the incremental
+        relaxations layered on top of this matrix assume an exact base
+        (every served distance is "exact or lower bound"), so a quantized
+        rebuild would silently poison that contract.
+        """
         with jit_span("incremental.rebuild", key=self.capacity):
-            self._dist = batcheval.batched_apsp(jnp.asarray(self.adj[None]))[0]
+            self._dist = jnp.asarray(
+                batcheval.apsp_matrices(self.adj[None], dtype="float32")[0])
         self.pending_deletions = 0
         self.stats["rebuilds"] += 1
 

@@ -107,6 +107,127 @@ def minplus_pallas_batched(
     )(a, b)
 
 
+# ---------------------------------------------------------------------------
+# blocked Floyd-Warshall APSP (the tiled engine behind batcheval "tiled")
+# ---------------------------------------------------------------------------
+#
+# Per diagonal block k, three kernels over the same (T, T) block grid as
+# ``ref.apsp_tiled_ref`` (which is the bit-exact CPU twin — min over floats
+# is exact, so the 8-slab reductions here regroup the rank-1 candidate sets
+# of the ref without changing a single bit):
+#
+#   1. ``_fw_diag_kernel``    — close the diagonal tile in VMEM (rank-1 FW,
+#      sequential over T pivots: each pivot depends on the previous).
+#   2. ``_panel_*_kernel``    — min(p, diag ⊗ p) / min(p, p ⊗ diag) for the
+#      row/column panels, 1D grid over the panel's (T, T) blocks.
+#   3. ``_outer_kernel``      — min(d, colp ⊗ rowp) over the FULL 2D
+#      (N/T, N/T) block grid; each grid step reads one stationary output
+#      tile plus one panel tile from each operand (K = T, single panel).
+#
+# VMEM per step at T=256 fp32: 3-4 tiles of 256 KiB + the (T, 8, T) slab
+# temporary — ~1.3 MiB, far under the ~16 MiB/core budget, so the pipeline
+# can double-buffer the next tile while the VPU reduces the current one.
+
+
+def _fw_diag_kernel(d_ref, o_ref):
+    """Rank-1 Floyd-Warshall closure of one (T, T) tile, fully in VMEM."""
+    def body(k, d):
+        row = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=0)     # (1, T)
+        col = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=1)     # (T, 1)
+        return jnp.minimum(d, col + row)
+
+    o_ref[...] = jax.lax.fori_loop(0, d_ref.shape[0], body, d_ref[...])
+
+
+def _slab_minplus(acc, a, b):
+    """min(acc, a ⊗ b) by CHUNK-slab reduction; a is (M, T), b is (T, N)."""
+    def body(c, acc):
+        a_slab = jax.lax.dynamic_slice_in_dim(a, c * _CHUNK, _CHUNK, axis=1)
+        b_slab = jax.lax.dynamic_slice_in_dim(b, c * _CHUNK, _CHUNK, axis=0)
+        cand = a_slab[:, :, None] + b_slab[None, :, :]      # (M, CHUNK, N)
+        return jnp.minimum(acc, jnp.min(cand, axis=1))
+
+    return jax.lax.fori_loop(0, a.shape[1] // _CHUNK, body, acc)
+
+
+def _panel_left_kernel(diag_ref, p_ref, o_ref):
+    """One (T, T) block of the row panel: o = min(p, diag ⊗ p)."""
+    p = p_ref[...]
+    o_ref[...] = _slab_minplus(p, diag_ref[...], p)
+
+
+def _panel_right_kernel(p_ref, diag_ref, o_ref):
+    """One (T, T) block of the column panel: o = min(p, p ⊗ diag)."""
+    p = p_ref[...]
+    o_ref[...] = _slab_minplus(p, p, diag_ref[...])
+
+
+def _outer_kernel(d_ref, colp_ref, rowp_ref, o_ref):
+    """One (T, T) output tile: o = min(d, colp_tile ⊗ rowp_tile)."""
+    o_ref[...] = _slab_minplus(d_ref[...], colp_ref[...], rowp_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def apsp_tiled_pallas(d: jnp.ndarray, tile: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Blocked Floyd-Warshall APSP over a (N/T, N/T) Pallas block grid.
+
+    ``d`` is one (N, N) adjacency (0 diag, INF non-edges) with N divisible
+    by ``tile`` and ``tile`` divisible by 8 (``ops.apsp_tiled`` pads).
+    Keeps dtype (fp32 or bf16).  Bit-identical to ``ref.apsp_tiled_ref``
+    on the same padded input — the module docstring above explains why.
+    """
+    n = d.shape[0]
+    assert d.ndim == 2 and d.shape[1] == n, d.shape
+    assert n % tile == 0, (n, tile)
+    assert tile % _CHUNK == 0, tile
+    nb = n // tile
+    dt = d.dtype
+
+    def _call(kernel, grid, in_specs, out_specs, out_shape):
+        return pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=jax.ShapeDtypeStruct(out_shape, dt),
+            interpret=interpret)
+
+    t = tile
+    fw_diag = _call(
+        _fw_diag_kernel, (1,),
+        [pl.BlockSpec((t, t), lambda i: (0, 0))],
+        pl.BlockSpec((t, t), lambda i: (0, 0)), (t, t))
+    panel_left = _call(
+        _panel_left_kernel, (nb,),
+        [pl.BlockSpec((t, t), lambda j: (0, 0)),
+         pl.BlockSpec((t, t), lambda j: (0, j))],
+        pl.BlockSpec((t, t), lambda j: (0, j)), (t, n))
+    panel_right = _call(
+        _panel_right_kernel, (nb,),
+        [pl.BlockSpec((t, t), lambda i: (i, 0)),
+         pl.BlockSpec((t, t), lambda i: (0, 0))],
+        pl.BlockSpec((t, t), lambda i: (i, 0)), (n, t))
+    outer = _call(
+        _outer_kernel, (nb, nb),
+        [pl.BlockSpec((t, t), lambda i, j: (i, j)),
+         pl.BlockSpec((t, t), lambda i, j: (i, 0)),
+         pl.BlockSpec((t, t), lambda i, j: (0, j))],
+        pl.BlockSpec((t, t), lambda i, j: (i, j)), (n, n))
+
+    def kblock(kb, d):
+        o = kb * t
+        diag = fw_diag(jax.lax.dynamic_slice(d, (o, o), (t, t)))
+        rowp = jax.lax.dynamic_update_slice(
+            jax.lax.dynamic_slice(d, (o, 0), (t, n)), diag, (0, o))
+        rowp = panel_left(diag, rowp)
+        colp = jax.lax.dynamic_update_slice(
+            jax.lax.dynamic_slice(d, (0, o), (n, t)), diag, (o, 0))
+        colp = panel_right(colp, diag)
+        d = jax.lax.dynamic_update_slice(d, rowp, (o, 0))
+        d = jax.lax.dynamic_update_slice(d, colp, (0, o))
+        return outer(d, colp, rowp)
+
+    return jax.lax.fori_loop(0, nb, kblock, d)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def minplus_pallas(
     a: jnp.ndarray,

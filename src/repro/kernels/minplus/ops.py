@@ -1,8 +1,14 @@
-"""jit'd public wrapper for the min-plus kernel (padding + backend dispatch).
+"""jit'd public wrappers for the min-plus kernels (padding + dispatch).
 
-On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
+On TPU the Pallas kernels run compiled; on CPU (this container) they run in
 interpret mode for correctness validation, and callers that need speed use
-the jnp oracle (``repro.core.diameter`` defaults to the oracle on CPU).
+the jnp oracles (``repro.core.batcheval`` picks per backend).
+
+Blocks are chosen ADAPTIVELY from the operand shape: a 20-node product pads
+to 24 (the next 8-multiple), not to 128 — padding with +INF is semantically
+neutral (padded k entries contribute INF + x and never win the min; padded
+rows/cols are sliced off), but an 128-block pad at N=20 was 40x wasted
+work.  On TPU, shapes >= 128 keep the 128 lane-aligned block.
 """
 from __future__ import annotations
 
@@ -11,8 +17,28 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import INF, minplus_pallas, minplus_pallas_batched
-from .ref import minplus_batched_ref, minplus_ref
+from .kernel import (INF, _CHUNK, apsp_tiled_pallas, minplus_pallas,
+                     minplus_pallas_batched)
+from .ref import apsp_tiled_ref, minplus_batched_ref, minplus_ref
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _auto_block(*dims: int) -> int:
+    """Smallest 8-multiple covering the largest dim, capped at 128 (the
+    TPU lane-aligned tile; larger shapes are gridded over 128-blocks)."""
+    return min(128, _ceil_to(max(max(dims), _CHUNK), _CHUNK))
+
+
+def default_tile(n: int, cap: int = 256) -> int:
+    """Tile for the blocked-FW APSP: the smallest 8-multiple tiling N in
+    ``ceil(N / cap)`` blocks, so padding waste stays under one 8-row slab
+    per block row instead of rounding N all the way up to a cap multiple
+    (N=300 tiles as 2 x 152, not 2 x 256)."""
+    nb = max(1, -(-n // cap))
+    return _ceil_to(max(-(-n // nb), _CHUNK), _CHUNK)
 
 
 def _pad_to(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
@@ -26,16 +52,14 @@ def _pad_to(x: jnp.ndarray, mult: int, fill: float) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def minplus(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
+def minplus(a: jnp.ndarray, b: jnp.ndarray, block: int | None = None,
             interpret: bool | None = None) -> jnp.ndarray:
-    """Min-plus product with INF padding to block multiples.
-
-    Padding with +INF is semantically neutral: padded k entries contribute
-    INF + x >= INF and never win the min; padded rows/cols are sliced off.
-    """
+    """Min-plus product with INF padding to (adaptive) block multiples."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     m, n = a.shape[0], b.shape[1]
+    if block is None:
+        block = _auto_block(m, a.shape[1], n)
     a32 = _pad_to(a.astype(jnp.float32), block, INF)
     b32 = _pad_to(b.astype(jnp.float32), block, INF)
     out = minplus_pallas(a32, b32, bm=block, bn=block, bk=block,
@@ -44,7 +68,7 @@ def minplus(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("block", "force_kernel"))
-def minplus_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
+def minplus_batched(a: jnp.ndarray, b: jnp.ndarray, block: int | None = None,
                     force_kernel: bool = False) -> jnp.ndarray:
     """Batched min-plus product ``(B, M, K) x (B, K, N) -> (B, M, N)``.
 
@@ -57,6 +81,8 @@ def minplus_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
     if not (on_tpu or force_kernel):
         return minplus_batched_ref(a, b)
     m, n = a.shape[1], b.shape[2]
+    if block is None:
+        block = _auto_block(m, a.shape[2], n)
     a32 = _pad_to(a.astype(jnp.float32), block, INF)
     b32 = _pad_to(b.astype(jnp.float32), block, INF)
     out = minplus_pallas_batched(a32, b32, bm=block, bn=block, bk=block,
@@ -64,4 +90,35 @@ def minplus_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 128,
     return out[:, :m, :n]
 
 
-__all__ = ["minplus", "minplus_batched", "minplus_ref", "minplus_batched_ref"]
+@functools.partial(jax.jit, static_argnames=("tile", "force_kernel",
+                                             "interpret", "symmetric"))
+def apsp_tiled(d: jnp.ndarray, tile: int | None = None, *,
+               force_kernel: bool = False, interpret: bool | None = None,
+               symmetric: bool = False) -> jnp.ndarray:
+    """Blocked Floyd-Warshall APSP of one (N, N) adjacency, memory-bounded.
+
+    Pads N to a ``tile`` multiple with INF (padded nodes are unreachable
+    and sliced off), then runs the (N/T, N/T) block-grid engine: the Pallas
+    kernel on TPU (or under ``force_kernel``, interpret mode off-TPU), the
+    bit-identical jnp twin ``ref.apsp_tiled_ref`` otherwise.  Keeps the
+    input dtype (fp32 or bf16).  ``symmetric`` enables the ref's
+    column-panel-as-transpose shortcut — bitwise-safe for the undirected
+    overlays this repo builds; pass ``False`` for directed inputs.
+    """
+    n = d.shape[-1]
+    assert d.ndim == 2 and d.shape[0] == n, d.shape
+    if tile is None:
+        tile = default_tile(n)
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    dp = _pad_to(d, tile, INF)
+    if on_tpu or force_kernel:
+        out = apsp_tiled_pallas(dp, tile=tile, interpret=interpret)
+    else:
+        out = apsp_tiled_ref(dp, tile, symmetric=symmetric)
+    return out[:n, :n]
+
+
+__all__ = ["minplus", "minplus_batched", "minplus_ref", "minplus_batched_ref",
+           "apsp_tiled", "default_tile"]

@@ -73,6 +73,19 @@ def model_dcn_latency(n_hosts: int, n_pods: int = 1, seed: int = 0) -> np.ndarra
     return lat.astype(np.float32)
 
 
+def make_eval_mesh(n: Optional[int] = None, axis: str = "batch"):
+    """1D mesh over the local devices for sharded bulk evaluation.
+
+    The batch-evaluation counterpart of ``make_production_mesh``: candidate
+    scoring has no model axis, so ``batcheval.diameters_sharded`` /
+    ``apsp_rowshard`` just want every chip on one named axis.  ``n`` caps
+    the device count (tests pin it under
+    ``--xla_force_host_platform_device_count``)."""
+    devices = jax.devices()
+    k = min(n or len(devices), len(devices))
+    return make_mesh((k,), (axis,), devices=devices[:k])
+
+
 def make_production_mesh(*, multi_pod: bool = False, dgro_order: bool = False,
                          latency: Optional[np.ndarray] = None,
                          chips_per_host: int = 4):

@@ -22,11 +22,11 @@ layer's overhead at <= 5% of the uninstrumented path.
 from .logsetup import configure, get_logger, kv  # noqa: F401
 from .metrics import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
                       MetricsRegistry, parse_prometheus)
-from .tracing import (TimedRLock, current_span, jit_span,  # noqa: F401
-                      reset_jit_state, span)
+from .tracing import (TimedRLock, current_span, jit_phase,  # noqa: F401
+                      jit_span, reset_jit_state, span)
 
 __all__ = [
     "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "parse_prometheus", "span", "current_span", "jit_span",
+    "parse_prometheus", "span", "current_span", "jit_span", "jit_phase",
     "reset_jit_state", "TimedRLock", "configure", "get_logger", "kv",
 ]

@@ -31,8 +31,8 @@ from typing import Optional, Tuple
 
 from .metrics import LATENCY_BUCKETS_S, REGISTRY, Histogram, MetricsRegistry
 
-__all__ = ["span", "current_span", "jit_span", "reset_jit_state",
-           "TimedRLock"]
+__all__ = ["span", "current_span", "jit_span", "jit_phase",
+           "reset_jit_state", "TimedRLock"]
 
 _local = threading.local()
 
@@ -160,6 +160,18 @@ def _is_first(name: str, key) -> bool:
             return False
         _jit_seen.add(k)
         return True
+
+
+def jit_phase(name: str, key=None) -> str:
+    """Compile/execute split for callers that time a jit'd call themselves.
+
+    Returns ``"compile"`` on the first call per (name, key) and
+    ``"execute"`` after — the same split ``jit_span`` applies, exposed as
+    a label value for code that observes its own histogram (e.g. the
+    ``repro_apsp_seconds{method, phase}`` engine timings in
+    ``core.batcheval``).  Shares ``reset_jit_state()`` with ``jit_span``.
+    """
+    return "compile" if _is_first(name, key) else "execute"
 
 
 class jit_span:

@@ -29,7 +29,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import selection
+from repro.core import batcheval, selection
 from repro.obs import REGISTRY, get_logger, kv, span
 
 from .state import ServiceState
@@ -53,6 +53,7 @@ class Reoptimizer:
     def __init__(self, state: ServiceState, *, every: int = 32,
                  method: str = "adapt", seed: int = 0,
                  snapshot_every: int = 64, eps: float = 0.3,
+                 eval_opts: Optional[dict] = None,
                  crash_hook: Optional[Callable[[], None]] = None):
         if method not in ("adapt", "dqn"):
             raise ValueError(f"unknown reopt method {method!r}; "
@@ -61,6 +62,11 @@ class Reoptimizer:
         self.every = every
         self.method = method
         self.eps = eps                  # adapt's "keep" band half-width
+        # scoped batcheval knobs for candidate SCORING only (dtype/method/
+        # chunk...); reduced precision is safe here because the commit path
+        # re-lands the chosen ring as exact incremental relaxations — a
+        # mis-ranked candidate costs quality, never correctness
+        self.eval_opts = dict(eval_opts or {})
         self.snapshot_every = snapshot_every
         self.crash_hook = crash_hook
         self._rng = np.random.default_rng(seed)
@@ -168,6 +174,10 @@ class Reoptimizer:
 
     def _optimize(self, job, seed: int):
         """Compute the candidate overlay on the frozen copy (no locks)."""
+        with batcheval.eval_options(**self.eval_opts):
+            return self._optimize_inner(job, seed)
+
+    def _optimize_inner(self, job, seed: int):
         if self.method == "adapt":
             new_ov, kind, _rho = selection.adapt(job.overlay, eps=self.eps,
                                                  seed=seed)

@@ -1,0 +1,337 @@
+"""The tiled/streamed APSP engine: correctness, memory model, precision
+contracts, scoped options, sharded parity, and the observability surface."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from conftest import subproc_env
+from repro.core import batcheval
+from repro.core.construction import random_ring
+from repro.core.diameter import INF, adjacency_from_rings, is_edge
+from repro.core.topology import make_latency
+from repro.kernels.minplus.ops import apsp_tiled
+
+
+def _scipy_apsp(adj):
+    from scipy.sparse.csgraph import shortest_path
+    graph = np.where(np.asarray(is_edge(adj)), np.asarray(adj), 0.0)
+    return shortest_path(graph, method="D", directed=True)
+
+
+def _ring_batch(n, b, seed, k_rings=2, dist="uniform"):
+    rng = np.random.default_rng(seed)
+    w = make_latency(dist, n, seed=seed)
+    genomes = np.stack([[random_ring(rng, n) for _ in range(k_rings)]
+                        for _ in range(b)])
+    return w, genomes, batcheval.adjacency_batch_from_rings(w, genomes)
+
+
+# --- tiled APSP vs scipy (property) -----------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(6, 70), st.integers(0, 10**6))
+def test_tiled_apsp_property_vs_scipy(n, seed):
+    """Random sizes (mostly NOT tile multiples), random symmetric rings."""
+    rng = np.random.default_rng(seed)
+    w = make_latency("uniform", n, seed=seed % 997)
+    adj = adjacency_from_rings(w, [random_ring(rng, n)])
+    got = np.asarray(apsp_tiled(jnp.asarray(adj), tile=16))
+    want = _scipy_apsp(adj)
+    np.testing.assert_allclose(np.where(got >= INF / 2, np.inf, got), want,
+                               rtol=1e-5)
+
+
+def test_tiled_apsp_disconnected_components():
+    """Two components: cross-component entries must stay >= INF/2 and the
+    intra-component distances must match scipy exactly."""
+    rng = np.random.default_rng(0)
+    n1, n2 = 14, 9
+    w1 = make_latency("uniform", n1, seed=1)
+    w2 = make_latency("uniform", n2, seed=2)
+    a1 = adjacency_from_rings(w1, [random_ring(rng, n1)])
+    a2 = adjacency_from_rings(w2, [random_ring(rng, n2)])
+    adj = np.full((n1 + n2, n1 + n2), float(INF), np.float32)
+    adj[:n1, :n1] = a1
+    adj[n1:, n1:] = a2
+    np.fill_diagonal(adj, 0.0)
+    got = np.asarray(apsp_tiled(jnp.asarray(adj), tile=8))
+    assert np.all(got[:n1, n1:] >= INF / 2) and np.all(got[n1:, :n1] >= INF / 2)
+    np.testing.assert_allclose(got[:n1, :n1], _scipy_apsp(a1), rtol=1e-5)
+    np.testing.assert_allclose(got[n1:, n1:], _scipy_apsp(a2), rtol=1e-5)
+
+
+def test_tiled_apsp_asymmetric_latency():
+    """Directed (asymmetric) weights through the general (non-symmetric)
+    panel path, vs directed scipy."""
+    rng = np.random.default_rng(3)
+    n = 23
+    adj = np.full((n, n), float(INF), np.float32)
+    order = rng.permutation(n)
+    for i in range(n):                     # a directed ring + random chords
+        adj[order[i], order[(i + 1) % n]] = rng.uniform(1, 10)
+    for _ in range(3 * n):
+        i, j = rng.integers(0, n, 2)
+        if i != j:
+            adj[i, j] = rng.uniform(1, 10)
+    np.fill_diagonal(adj, 0.0)
+    got = np.asarray(apsp_tiled(jnp.asarray(adj), tile=8))
+    np.testing.assert_allclose(np.where(got >= INF / 2, np.inf, got),
+                               _scipy_apsp(adj), rtol=1e-5)
+
+
+# --- streaming facade -------------------------------------------------------
+
+def test_streamed_bit_identical_to_direct():
+    """Chunked streaming (including the padded trailing partial chunk) must
+    return the same BITS as one direct batched_diameter over the stack."""
+    _, _, adjs = _ring_batch(24, 23, seed=4)
+    ref = np.asarray(batcheval.batched_diameter(jnp.asarray(adjs)))
+    for chunk in (4, 7, 23, 64):
+        got = batcheval.diameters(adjs, chunk=chunk)
+        assert np.array_equal(got, ref), chunk
+
+
+def test_ring_block_source_matches_dense_assembly():
+    w, genomes, adjs = _ring_batch(20, 9, seed=5)
+    dense = batcheval.diameters(adjs, chunk=4)
+    src = batcheval.RingBlockSource(w, genomes)
+    assert len(src) == 9 and src.n == 20
+    streamed = batcheval.diameters(src, chunk=4)
+    assert np.array_equal(streamed, dense)
+    assert np.array_equal(
+        batcheval.diameters_of_rings(w, genomes, chunk=4), dense)
+
+
+def test_apsp_matrices_streams_full_distances():
+    _, _, adjs = _ring_batch(16, 6, seed=6)
+    direct = np.asarray(batcheval.batched_apsp(jnp.asarray(adjs)))
+    got = batcheval.apsp_matrices(adjs, chunk=2)
+    assert got.dtype == np.float32
+    assert np.array_equal(got, direct)
+
+
+def test_tiled_method_through_facade():
+    _, _, adjs = _ring_batch(40, 5, seed=7)
+    ref = batcheval.diameters(adjs)
+    got = batcheval.diameters(adjs, method="tiled", tile=16)
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+    assert batcheval.last_eval_report()["method"] == "tiled"
+
+
+# --- precision contracts ----------------------------------------------------
+
+def test_bfloat16_error_bound_and_report():
+    # gaussian: continuous weights, so bf16 rounding shows a REAL error
+    # (integer-valued worlds sum exactly in bf16 and would test nothing)
+    _, _, adjs = _ring_batch(32, 12, seed=8, dist="gaussian")
+    ref = batcheval.diameters(adjs)
+    got = batcheval.diameters(adjs, dtype="bfloat16")
+    rel = np.max(np.abs(got - ref) / np.maximum(ref, 1e-9))
+    assert 0 < rel < 0.05, rel        # bf16 has ~3 decimal digits
+    rep = batcheval.last_eval_report()
+    assert rep["dtype"] == "bfloat16" and not rep["fallback"]
+    assert 0 < rep["quant_rel_err"] < 0.05
+
+
+def test_int16_quantized_error_bound():
+    _, _, adjs = _ring_batch(32, 12, seed=9, dist="gaussian")
+    ref = batcheval.diameters(adjs)
+    got = batcheval.diameters(adjs, dtype="int16")
+    rel = np.max(np.abs(got - ref) / np.maximum(ref, 1e-9))
+    assert rel < 1e-3, rel            # 16-bit grid: per-hop err <= scale/2
+    q, scale = batcheval.quantize_latency(adjs)
+    assert scale > 0
+    # sentinel and diagonal pass through bit-exact
+    assert np.array_equal(np.asarray(is_edge(q)), np.asarray(is_edge(adjs)))
+    assert np.all(q[~np.asarray(is_edge(adjs))]
+                  == adjs[~np.asarray(is_edge(adjs))])
+
+
+def test_exact_fallback_fires_and_is_bit_exact():
+    _, _, adjs = _ring_batch(24, 8, seed=10, dist="gaussian")
+    ref = batcheval.diameters(adjs)
+    got = batcheval.diameters(adjs, dtype="bfloat16", exact_rtol=0.0)
+    rep = batcheval.last_eval_report()
+    assert rep["fallback"], rep
+    assert np.array_equal(got, ref)   # the rerun is the exact f32 path
+
+
+def test_incremental_rebuild_pinned_float32():
+    """dynamics.incremental rebuilds its base distances in f32 even under
+    an ambient reduced-precision eval_options scope."""
+    from repro.dynamics.incremental import IncrementalDistances
+    rng = np.random.default_rng(11)
+    w = make_latency("uniform", 16, seed=11)
+    adj = adjacency_from_rings(w, [random_ring(rng, 16)])
+    with batcheval.eval_options(dtype="bfloat16"):
+        inc = IncrementalDistances(w, adj, np.ones(16, bool))
+    dist = np.asarray(inc.distances)
+    assert dist.dtype == np.float32
+    np.testing.assert_allclose(np.where(dist >= INF / 2, np.inf, dist),
+                               _scipy_apsp(adj), rtol=1e-5)
+
+
+# --- options & memory model -------------------------------------------------
+
+def test_eval_options_resolution_and_nesting():
+    _, _, adjs = _ring_batch(20, 4, seed=12)
+    with batcheval.eval_options(method="squaring"):
+        batcheval.diameters(adjs)
+        assert batcheval.last_eval_report()["method"] == "squaring"
+        with batcheval.eval_options(method="tiled"):
+            batcheval.diameters(adjs)
+            assert batcheval.last_eval_report()["method"] == "tiled"
+            # explicit kwarg beats the innermost context
+            batcheval.diameters(adjs, method="fw")
+            assert batcheval.last_eval_report()["method"] == "fw"
+        batcheval.diameters(adjs)
+        assert batcheval.last_eval_report()["method"] == "squaring"
+    with pytest.raises(ValueError):
+        with batcheval.eval_options(method="dijkstra"):
+            pass
+    with pytest.raises(ValueError):
+        with batcheval.eval_options(typo=1):
+            pass
+
+
+def test_default_chunk_per_method():
+    n = 64
+    # fw: 8 N^2 slabs per item -> 256MiB / (4*64*64*8) = 2048
+    assert batcheval.default_chunk(n, "fw") == 2048
+    # CPU-oracle squaring: N^3 temporary per item -> 256
+    assert batcheval.default_chunk(n, "squaring") == 256
+    # tiled: fixed panels shared across the chunk, one N^2 per item
+    assert batcheval.default_chunk(n, "tiled") > 2048
+    # bf16 halves the per-item cost
+    assert (batcheval.default_chunk(n, "fw", dtype="bfloat16")
+            == 2 * batcheval.default_chunk(n, "fw"))
+    # a single matrix always fits
+    assert batcheval.default_chunk(4096, "fw") == 1
+    # tighter explicit budget -> smaller chunk, never 0
+    assert batcheval.default_chunk(n, "fw", budget_bytes=1) == 1
+
+
+def test_mem_budget_env_override(monkeypatch):
+    base = batcheval.default_chunk(64, "fw")
+    monkeypatch.setenv("REPRO_APSP_MEM_BYTES", str(1 << 20))
+    small = batcheval.default_chunk(64, "fw")
+    assert small < base and small == (1 << 20) // (4 * 64 * 64 * 8)
+    # the facade picks it up end to end
+    _, _, adjs = _ring_batch(64, 12, seed=13)
+    ref = batcheval.diameters(adjs, chunk=12)
+    got = batcheval.diameters(adjs)
+    rep = batcheval.last_eval_report()
+    assert rep["chunk"] == small and rep["device_calls"] > 1
+    assert np.array_equal(got, ref)
+
+
+def test_workingset_model_orders():
+    ws_fw = batcheval.workingset_bytes(4, 256, "fw")
+    ws_sq = batcheval.workingset_bytes(4, 256, "squaring")
+    ws_tiled = batcheval.workingset_bytes(4, 256, "tiled")
+    assert ws_sq > ws_fw > 0            # N^3 temporary dominates
+    assert ws_tiled < ws_fw             # the point of the blocked engine
+    assert (batcheval.workingset_bytes(4, 256, "fw", dtype="bfloat16")
+            == ws_fw // 2)
+
+
+# --- observability ----------------------------------------------------------
+
+def test_apsp_metrics_and_report():
+    from repro.obs import REGISTRY, parse_prometheus
+    _, _, adjs = _ring_batch(24, 10, seed=14)
+    batcheval.diameters(adjs, chunk=3)
+    scraped = parse_prometheus(REGISTRY.render_prometheus())
+    counts = scraped["repro_apsp_seconds_count"]
+    assert sum(counts.values()) >= 1, counts
+    assert any(dict(k).get("phase") in ("compile", "execute")
+               for k in counts), counts
+    assert scraped["repro_apsp_workingset_bytes"][()] > 0
+    rep = batcheval.last_eval_report()
+    assert rep["b"] == 10 and rep["chunk"] == 3 and rep["device_calls"] == 4
+    assert rep["workingset_bytes"] == batcheval.workingset_bytes(
+        3, 24, rep["method"])
+
+
+def test_jit_phase_transitions():
+    from repro.obs import jit_phase
+    assert jit_phase("test.phase.unique", key=(1,)) == "compile"
+    assert jit_phase("test.phase.unique", key=(1,)) == "execute"
+    assert jit_phase("test.phase.unique", key=(2,)) == "compile"
+
+
+# --- consumers --------------------------------------------------------------
+
+def test_parallel_scoring_accepts_eval_opts():
+    from repro.core.parallel import parallel_ring_scored
+    w = make_latency("uniform", 24, seed=15)
+    ring, blocks = parallel_ring_scored(w, 4, seed=0, score_blocks=True)
+    ring2, blocks2 = parallel_ring_scored(w, 4, seed=0, score_blocks=True,
+                                          eval_opts={"method": "squaring"})
+    assert np.array_equal(ring, ring2)
+    np.testing.assert_allclose(blocks, blocks2, rtol=1e-5)
+
+
+def test_reoptimizer_scoped_eval_opts():
+    from repro.dynamics.scenarios import Trace
+    from repro.service.reoptimizer import Reoptimizer
+    from repro.service.state import ServiceState
+    world = Trace(n0=12, capacity=16, dist="uniform", seed=0, events=[],
+                  name="apsp-engine-test")
+    state = ServiceState.fresh(world, policy="dgro", seed=0)
+    r = Reoptimizer(state, eval_opts={"dtype": "bfloat16"})
+    r.step(force=True)              # must run end to end under the scope
+    assert r.last_error is None, r.last_error
+
+
+# --- sharded ----------------------------------------------------------------
+
+def test_sharded_single_device_degrades_to_streaming():
+    _, _, adjs = _ring_batch(20, 6, seed=16)
+    ref = batcheval.diameters(adjs)
+    got = batcheval.diameters_sharded(adjs)
+    assert np.array_equal(got, ref)
+
+
+def test_sharded_and_rowshard_multi_device():
+    """8 forced host devices: batch-sharded diameters and the row-sharded
+    single-matrix APSP both match the streaming engine exactly."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+import jax.numpy as jnp
+from repro.core import batcheval
+from repro.core.construction import random_ring
+from repro.core.diameter import adjacency_from_rings
+from repro.core.topology import make_latency
+from repro.launch.mesh import make_eval_mesh
+
+rng = np.random.default_rng(0)
+w = make_latency("uniform", 30, seed=1)
+genomes = np.stack([[random_ring(rng, 30)] for _ in range(13)])
+adjs = batcheval.adjacency_batch_from_rings(w, genomes)
+ref = batcheval.diameters(adjs)
+
+got8 = batcheval.diameters_sharded(adjs)        # default mesh: all 8
+assert np.array_equal(got8, ref), (got8, ref)
+assert batcheval.last_eval_report()["devices"] == 8
+
+mesh4 = make_eval_mesh(4)
+got4 = batcheval.diameters_sharded(adjs, mesh=mesh4)
+assert np.array_equal(got4, ref), (got4, ref)
+
+adj = adjs[0]
+want = np.asarray(batcheval.batched_apsp(jnp.asarray(adj)[None])[0])
+rows = np.asarray(batcheval.apsp_rowshard(adj))   # 30 pads to 32 over 8
+assert rows.shape == (30, 30) and np.array_equal(rows, want)
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=subproc_env(), cwd=".", timeout=600)
+    assert "OK" in out.stdout, out.stderr[-2000:]

@@ -82,6 +82,81 @@ def test_minplus_apsp_integration():
     assert float(d_kernel.max()) == pytest.approx(diameter_scipy(adj), rel=1e-5)
 
 
+@pytest.mark.parametrize("shape", [(100, 36, 20), (37, 53, 29), (5, 130, 7)])
+def test_minplus_adaptive_block_bit_identical(shape):
+    """Regression for the pad-to-128 waste: with the default (adaptive)
+    block the padded kernel output must be BIT-identical to the jnp oracle
+    for non-multiple shapes — min over the INF-padded candidates is exact,
+    so any deviation means the padding leaked into the reduction."""
+    m, k, n = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    a = jnp.asarray(rng.uniform(0, 10, (m, k)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 10, (k, n)).astype(np.float32))
+    got = np.asarray(minplus(a, b, interpret=True))
+    assert np.array_equal(got, np.asarray(minplus_ref(a, b))), shape
+
+
+def test_minplus_batched_adaptive_block_bit_identical():
+    from repro.kernels.minplus.ops import minplus_batched
+    from repro.kernels.minplus.ref import minplus_batched_ref
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.uniform(0, 10, (2, 45, 70)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 10, (2, 70, 31)).astype(np.float32))
+    got = np.asarray(minplus_batched(a, b, force_kernel=True))
+    assert np.array_equal(got, np.asarray(minplus_batched_ref(a, b)))
+
+
+def test_adaptive_block_sizes():
+    """The auto block covers small operands without padding to 128 and
+    the auto tile splits non-multiple N into balanced multiple-of-8 tiles."""
+    from repro.kernels.minplus.ops import _auto_block, default_tile
+    assert _auto_block(20, 33) == 40       # ceil(33 -> /8) is 40, not 128
+    assert _auto_block(7, 5) == 8
+    assert _auto_block(300, 40) == 128     # large dims still cap at 128
+    assert default_tile(256) == 256
+    assert default_tile(300) == 152        # 2 tiles of 152, not 2 of 256
+    assert default_tile(1024) == 256
+
+
+# --- tiled (blocked) Floyd-Warshall APSP ------------------------------------
+
+def _ring_adj(n, seed, k_rings=2):
+    from repro.core.construction import random_ring
+    from repro.core.diameter import adjacency_from_rings
+    from repro.core.topology import make_latency
+    rng = np.random.default_rng(seed)
+    w = make_latency("uniform", n, seed=seed)
+    return adjacency_from_rings(w, [random_ring(rng, n)
+                                    for _ in range(k_rings)])
+
+
+@pytest.mark.parametrize("n,tile", [(24, 8), (37, 16), (64, 16)])
+def test_apsp_tiled_kernel_bitwise_matches_ref(n, tile):
+    """Pallas blocked FW (interpret on CPU) vs the jnp twin: the two run
+    the same blocked schedule over the same candidates, so the float32
+    results must be bit-identical — non-multiple N exercises the INF pad."""
+    from repro.kernels.minplus.ops import apsp_tiled
+    adj = jnp.asarray(_ring_adj(n, seed=n))
+    ref = np.asarray(apsp_tiled(adj, tile=tile))
+    ker = np.asarray(apsp_tiled(adj, tile=tile, force_kernel=True,
+                                interpret=True))
+    assert np.array_equal(ref, ker), (n, tile)
+    sym = np.asarray(apsp_tiled(adj, tile=tile, symmetric=True))
+    assert np.array_equal(ref, sym), (n, tile)
+
+
+def test_apsp_tiled_matches_scipy():
+    from scipy.sparse.csgraph import shortest_path
+    from repro.core.diameter import INF, is_edge
+    from repro.kernels.minplus.ops import apsp_tiled
+    adj = _ring_adj(30, seed=5)
+    got = np.asarray(apsp_tiled(jnp.asarray(adj), tile=8))
+    graph = np.where(np.asarray(is_edge(adj)), adj, 0.0)
+    want = shortest_path(graph, method="D", directed=False)
+    np.testing.assert_allclose(np.where(got >= INF / 2, np.inf, got), want,
+                               rtol=1e-5)
+
+
 # --- flash attention --------------------------------------------------------
 
 CASES = [

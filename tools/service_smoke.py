@@ -112,6 +112,13 @@ def main() -> None:
             assert route_reqs[key] == 1, route_reqs
             assert scraped["repro_route_hops_count"][()] == 1, scraped
 
+        # the APSP engine instruments: the forced re-optimization scored
+        # candidates through batcheval, so the per-phase evaluation spans
+        # and the working-set gauge must have landed in the same scrape
+        apsp_counts = scraped["repro_apsp_seconds_count"]
+        assert sum(apsp_counts.values()) >= 1, apsp_counts
+        assert scraped["repro_apsp_workingset_bytes"][()] > 0, scraped
+
         c.shutdown()
         rc = proc.wait(timeout=30)
         assert rc == 0, f"daemon exited {rc}"
