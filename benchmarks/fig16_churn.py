@@ -152,6 +152,11 @@ def run(n_gate: int = 128, gate_ops: int = 80, gate_threshold: int = 16,
     results["initial_overlays"] = {}
     for sname, make in SCENARIOS.items():
         trace = make(n0=traj_n0, seed=seed + 3)
+        if any(e.kind.startswith("cluster_") for e in trace.events):
+            # cluster reorg scenarios need the hierarchical engine; the
+            # flat-policy trajectory comparison here skips them (fig21
+            # exercises them through HierChurnEngine)
+            continue
         for pname, P in POLICIES.items():
             eng = ChurnEngine(trace, P(), seed=seed + 4,
                               detect_failures=True, route_probe=4)

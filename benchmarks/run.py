@@ -97,6 +97,12 @@ GATES = {
                         key="passes_gate",
                         bench_file="BENCH_fig20_scale.json",
                         bench_metric="gate.largest_n_diam_per_s"),
+    "fig21-hier": Gate("N=1e5 hier construct+maintain (>=200 churn events) "
+                       "within CPU budget, hier diameter <= 1.5x flat exact "
+                       "at small N, served distances lower-bound exact APSP, "
+                       "flat serde byte-identical",
+                       key="passes_gate", bench_file="BENCH_fig21_hier.json",
+                       bench_metric="scale.events_per_s"),
     "roofline": Gate("informational: kernel roofline table renders"),
 }
 
@@ -145,7 +151,7 @@ def main() -> None:
                             fig13_kring_compare, fig14_parallel,
                             fig15_batcheval, fig16_churn, fig17_service,
                             fig18_obs, fig19_routing, fig20_scale,
-                            roofline_table)
+                            fig21_hier, roofline_table)
 
     fast = args.fast
     jobs = [
@@ -211,6 +217,12 @@ def main() -> None:
             ns=(64, 128, 256) if fast else (256, 1024, 4096),
             b=16 if fast else 64,
             b_cap=None if fast else 8)),
+        # the hier gates always run at N=1e5 (scale) and N<=512 (bound
+        # validity vs exact APSP + flat parity); --fast only trims the
+        # churn stream toward the >=200-event floor and the small-N size
+        ("fig21-hier", lambda: fig21_hier.run(
+            events=200 if fast else 300,
+            n_small=256 if fast else 384)),
         ("roofline", roofline_table.run),
     ]
 

@@ -49,7 +49,7 @@ from repro.membership.elastic import HostState, detect_stragglers
 from repro.membership.gossip import SwimConfig, confirmed_leave_time
 
 from .incremental import IncrementalDistances
-from .scenarios import Event, N_FABRIC_SITES, Trace
+from .scenarios import EVENT_KINDS, Event, N_FABRIC_SITES, Trace
 
 __all__ = [
     "TrajectorySample",
@@ -72,9 +72,7 @@ Edge = Tuple[int, int]
 _ENGINE_EVENTS = REGISTRY.counter(
     "repro_engine_events_total", "churn events applied, by kind",
     labels=("kind",))
-_EVENT_KIND = {k: _ENGINE_EVENTS.labels(kind=k)
-               for k in ("join", "leave", "fail", "latency_drift",
-                         "straggler")}
+_EVENT_KIND = {k: _ENGINE_EVENTS.labels(kind=k) for k in EVENT_KINDS}
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -616,6 +614,11 @@ class ChurnEngine:
             self._handle_drift(e.factor, e.region)
         elif e.kind == "straggler":
             self._handle_straggler(e.node, e.factor)
+        elif e.kind in ("cluster_split", "cluster_merge"):
+            raise ValueError(
+                f"{e.kind} events need a hierarchical engine "
+                f"(repro.hier.HierChurnEngine); the flat ChurnEngine has "
+                f"no cluster structure to reorganize")
         else:
             raise ValueError(f"unknown event kind {e.kind!r}")
         _EVENT_KIND[e.kind].inc()

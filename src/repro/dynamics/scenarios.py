@@ -32,9 +32,16 @@ from repro.core.topology import N_FABRIC_SITES, make_latency
 
 __all__ = ["Event", "Trace", "poisson_churn", "flash_crowd",
            "regional_failure", "diurnal_drift", "straggler_storm",
-           "merge_traces", "churn_with_drift", "SCENARIOS"]
+           "merge_traces", "churn_with_drift", "cluster_split_merge",
+           "SCENARIOS"]
 
-EVENT_KINDS = ("join", "leave", "fail", "latency_drift", "straggler")
+#: the five node-level kinds every engine handles, plus the two
+#: cluster-level kinds only hierarchical engines accept (the flat
+#: ``ChurnEngine`` raises a descriptive error on them)
+EVENT_KINDS = ("join", "leave", "fail", "latency_drift", "straggler",
+               "cluster_split", "cluster_merge")
+
+_NODE_KINDS = EVENT_KINDS[:5]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +49,18 @@ class Event:
     """One timestamped churn event (times in ms, node ids are slot indices).
 
     ``factor`` scales latencies for drift/straggler events; ``region``
-    restricts a drift to one FABRIC site (-1 = global).
+    restricts a drift to one FABRIC site (-1 = global).  For the
+    cluster-level kinds ``node`` holds the CLUSTER id (``cluster_split``
+    splits it in two; ``cluster_merge`` absorbs cluster ``peer`` into it).
+    ``peer`` is only serialized for cluster events, so node-level trace
+    JSON is byte-identical to the pre-hierarchy format.
     """
     time: float
     kind: str
     node: int = -1
     factor: float = 1.0
     region: int = -1
+    peer: int = -1
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -62,9 +74,21 @@ class Event:
             raise ValueError(
                 f"region must be -1 (global) or a FABRIC site in "
                 f"[0, {N_FABRIC_SITES}), got {self.region}")
+        if self.kind == "cluster_merge":
+            if self.peer < 0 or self.peer == self.node:
+                raise ValueError(
+                    f"cluster_merge needs a peer cluster id >= 0 distinct "
+                    f"from node, got node={self.node} peer={self.peer}")
+        elif self.peer != -1:
+            raise ValueError(
+                f"peer is only meaningful for cluster_merge events, got "
+                f"peer={self.peer} on a {self.kind!r} event")
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.kind in _NODE_KINDS:
+            d.pop("peer")       # node-level JSON stays byte-identical
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "Event":
@@ -201,6 +225,25 @@ def straggler_storm(n0: int = 40, dist: str = "gaussian", seed: int = 0, *,
                  events=events, name="straggler_storm")
 
 
+def cluster_split_merge(n0: int = 96, dist: str = "fabric", seed: int = 0, *,
+                        cluster: int = 0, peer: int = 1,
+                        t_split: float = 4_000.0, t_merge: float = 12_000.0,
+                        churn_rate: float = 0.2e-3,
+                        horizon: float = 16_000.0) -> Trace:
+    """Hierarchical reorganization under background churn: cluster
+    ``cluster`` splits in two, then later absorbs cluster ``peer``, while
+    Poisson join/leave churn keeps arriving.  Only hierarchical engines
+    accept the cluster events; the flat engine rejects this trace with a
+    descriptive error."""
+    churn = poisson_churn(n0, dist, seed, horizon=horizon,
+                          join_rate=churn_rate, leave_rate=churn_rate)
+    reorg = Trace(n0=n0, capacity=n0, dist=dist, seed=seed, events=[
+        Event(time=t_split, kind="cluster_split", node=cluster),
+        Event(time=t_merge, kind="cluster_merge", node=cluster, peer=peer),
+    ], name="cluster_reorg")
+    return merge_traces(churn, reorg, name="cluster_split_merge")
+
+
 def merge_traces(*traces: Trace, name: str | None = None) -> Trace:
     """Superimpose traces that share a latency world (n0/dist/seed must
     agree): events are merged in time order, capacity is the max.  This is
@@ -241,4 +284,5 @@ SCENARIOS: Dict[str, Callable[..., Trace]] = {
     "diurnal_drift": diurnal_drift,
     "straggler_storm": straggler_storm,
     "churn_with_drift": churn_with_drift,
+    "cluster_split_merge": cluster_split_merge,
 }

@@ -25,8 +25,25 @@ from .metrics import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
 from .tracing import (TimedRLock, current_span, jit_phase,  # noqa: F401
                       jit_span, reset_jit_state, span)
 
+# Pre-registered hierarchical-overlay defaults: present (at zero) in every
+# scrape even before ``repro.hier`` is imported, so dashboards and the
+# service smoke test can pin panels/assertions on them unconditionally.
+# ``repro.hier`` records into these same instruments (idempotent specs).
+HIER_CLUSTERS = REGISTRY.gauge(
+    "repro_hier_clusters",
+    "cluster count of the currently served hierarchical overlay")
+HIER_HEADRING_DIAMETER = REGISTRY.gauge(
+    "repro_hier_headring_diameter",
+    "diameter (ms) of the hierarchical overlay's head ring")
+HIER_ROUTE_HOPS = REGISTRY.histogram(
+    "repro_hier_route_hops",
+    "per-level hop count of delivered hierarchical routes",
+    labels=("level",),
+    buckets=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128))
+
 __all__ = [
     "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "parse_prometheus", "span", "current_span", "jit_span", "jit_phase",
     "reset_jit_state", "TimedRLock", "configure", "get_logger", "kv",
+    "HIER_CLUSTERS", "HIER_HEADRING_DIAMETER", "HIER_ROUTE_HOPS",
 ]

@@ -35,13 +35,24 @@ builder               paper section
                       per node (P ∝ 1/ringdist^exponent, Kleinberg 2000)
 ``"papillon"``        routing baseline: bounded-degree deterministic
                       butterfly long links (Abraham, Malkhi & Manku 2005)
+``"dgro-hier"``       §VI composed two-level hierarchy: latency-clustered
+                      partitions with cluster-local rings + a DGRO ring
+                      over cluster heads (``repro.hier``, lazily resolved;
+                      ``kind="hier"`` — returns a ``HierarchicalOverlay``)
 ====================  =====================================================
+
+Both overlay implementations — the flat :class:`Overlay` and
+:class:`repro.hier.HierarchicalOverlay` — satisfy the small
+:class:`~repro.overlay.protocol.Topology` protocol (``n``, ``edge_list``,
+``distance_bound``/``diameter_bound``, ``subset``, serde);
+:func:`from_topology_json` restores either from its JSON snapshot.
 
 New policies register with ``@overlay.register("name", config=Cfg)`` and are
 immediately buildable everywhere (benchmarks, churn engine, examples)
 without touching call sites.
 """
 from .core import Overlay  # noqa: F401
+from .protocol import Topology, from_topology_json  # noqa: F401
 from .registry import build, builders, get_builder, register  # noqa: F401
 from .policies import (ChordConfig, DGROConfig, DGRODQNConfig,  # noqa: F401
                        GAConfig, KleinbergConfig, NearestRingsConfig,
@@ -50,7 +61,8 @@ from .policies import (ChordConfig, DGROConfig, DGRODQNConfig,  # noqa: F401
                        chord_finger_edges, nearest_neighbour_edges)
 
 __all__ = [
-    "Overlay", "build", "builders", "get_builder", "register",
+    "Overlay", "Topology", "from_topology_json",
+    "build", "builders", "get_builder", "register",
     "ChordConfig", "DGROConfig", "DGRODQNConfig", "GAConfig",
     "KleinbergConfig", "NearestRingsConfig", "PapillonConfig",
     "ParallelConfig", "PerigeeConfig", "RandomRingsConfig", "RapidConfig",

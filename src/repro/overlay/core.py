@@ -127,6 +127,19 @@ class Overlay:
                 largest_cc_diameter(jnp.asarray(self.distances())))
         return self._cache["diameter"]
 
+    # -- topology-protocol bounds (repro.overlay.protocol) ----------------
+    # The flat Overlay's distances are always exact, so the bound stamps
+    # are constant; these wrappers exist so flat and hierarchical overlays
+    # answer the same questions through the same surface.
+
+    def distance_bound(self, u: int, v: int) -> Tuple[float, str]:
+        """(exact shortest-path latency, ``"exact"``)."""
+        return float(self.distances()[int(u), int(v)]), "exact"
+
+    def diameter_bound(self) -> Tuple[float, str]:
+        """(exact diameter, ``"exact"``)."""
+        return self.diameter(), "exact"
+
     def cache_diameter(self, d: float) -> "Overlay":
         """Pre-seed the diameter cache and return self.
 
@@ -176,9 +189,37 @@ class Overlay:
         """Restrict to the live nodes (churn): drop dead nodes from every
         ring (stitching predecessor to successor) and from the extra edges,
         reindexing to ``range(n_live)``.  Accepts a boolean mask or an index
-        array."""
+        array.
+
+        The index path validates once and sorts at most once (already-
+        sorted inputs — the common case: ``live_ids()`` output, cluster
+        member lists — pass through untouched), and the latency matrix is
+        sliced in a single advanced-indexing step, so the only (k, k)
+        allocation is the submatrix itself.  Out-of-range or duplicate
+        indices raise instead of being silently dropped.
+        """
         alive = np.asarray(alive)
-        idx = np.flatnonzero(alive) if alive.dtype == bool else np.unique(alive)
+        if alive.dtype == bool:
+            if alive.shape != (self.n,):
+                raise ValueError(
+                    f"boolean subset mask must have shape ({self.n},), got "
+                    f"{alive.shape}")
+            idx = np.flatnonzero(alive)
+        else:
+            idx = np.asarray(alive, dtype=np.intp).ravel()
+            if idx.size:
+                if int(idx.min()) < 0 or int(idx.max()) >= self.n:
+                    raise ValueError(
+                        f"subset indices must lie in [0, {self.n}), got "
+                        f"range [{idx.min()}, {idx.max()}]")
+                d = np.diff(idx)
+                if (d < 0).any():               # sort once, only if needed
+                    idx = np.sort(idx)
+                    d = np.diff(idx)
+                if (d == 0).any():
+                    raise ValueError(
+                        "subset indices contain duplicates; pass each live "
+                        "node at most once")
         if idx.size == 0:
             raise ValueError("subset() needs at least one live node")
         keep = np.zeros(self.n, dtype=bool)
@@ -261,6 +302,11 @@ class Overlay:
     @classmethod
     def from_json(cls, s: str) -> "Overlay":
         d = serde.loads(s, what="Overlay JSON")
+        if serde.payload_schema(d) != 1 or d.get("kind") == "hier_overlay":
+            raise ValueError(
+                "payload is a hierarchical (schema-2) topology; load it "
+                "with repro.hier.HierarchicalOverlay.from_json or "
+                "repro.overlay.from_topology_json")
         if d.get("version", 1) != 1:
             raise ValueError(f"unknown Overlay JSON version {d.get('version')!r}")
         return cls(np.asarray(d["w"], np.float32),

@@ -35,6 +35,11 @@ class BuilderSpec:
     name: str
     fn: BuilderFn
     config_cls: Optional[type]
+    # "flat" builders return a dense Overlay; "hier" builders return a
+    # HierarchicalOverlay (topology-protocol object, no dense adjacency) —
+    # flat-only invariants (global ring routing, dense APSP parity) filter
+    # on this
+    kind: str = "flat"
 
     def default_config(self, **overrides):
         if self.config_cls is None:
@@ -48,14 +53,28 @@ class BuilderSpec:
 
 _REGISTRY: Dict[str, BuilderSpec] = {}
 
+# builders that live OUTSIDE repro.overlay (above it in the layering) and
+# self-register on import: resolved lazily so `import repro.overlay` stays
+# light and the layering stays acyclic
+_LAZY_MODULES: Dict[str, str] = {"dgro-hier": "repro.hier"}
 
-def register(name: str, *, config: Optional[type] = None):
+
+def _resolve_lazy(name: Optional[str] = None) -> None:
+    import importlib
+    for key, module in _LAZY_MODULES.items():
+        if (name is None or name == key) and key not in _REGISTRY:
+            importlib.import_module(module)
+
+
+def register(name: str, *, config: Optional[type] = None,
+             kind: str = "flat"):
     """Decorator: register an overlay builder under ``name``."""
 
     def deco(fn: BuilderFn) -> BuilderFn:
         if name in _REGISTRY:
             raise ValueError(f"builder {name!r} already registered")
-        _REGISTRY[name] = BuilderSpec(name=name, fn=fn, config_cls=config)
+        _REGISTRY[name] = BuilderSpec(name=name, fn=fn, config_cls=config,
+                                      kind=kind)
         return fn
 
     return deco
@@ -63,13 +82,16 @@ def register(name: str, *, config: Optional[type] = None):
 
 def builders() -> Dict[str, Optional[type]]:
     """Registered builder names -> config class (None = no config)."""
+    _resolve_lazy()
     return {name: spec.config_cls for name, spec in sorted(_REGISTRY.items())}
 
 
 def get_builder(name: str) -> BuilderSpec:
+    _resolve_lazy(name)
     try:
         return _REGISTRY[name]
     except KeyError:
+        _resolve_lazy()     # the message must list lazy builders too
         # sorted, comma-joined: a stable message tests/docs can rely on
         raise ValueError(
             f"unknown overlay builder {name!r}; registered builders: "

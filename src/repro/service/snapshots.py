@@ -32,10 +32,12 @@ def _snap_dir(directory: str, seq: int) -> str:
 
 
 def write_snapshot(directory: str, seq: int, payload: Dict[str, Any], *,
-                   keep: int = 3) -> str:
+                   keep: int = 3, schema: Optional[int] = None) -> str:
     """Atomically commit ``payload`` as snapshot ``seq``; prune old ones.
 
-    Returns the committed directory path.
+    ``schema`` stamps the payload's serde schema (default flat schema 1;
+    hierarchical service snapshots pass ``serde.HIER_SCHEMA``).  Returns
+    the committed directory path.
     """
     os.makedirs(directory, exist_ok=True)
     final = _snap_dir(directory, seq)
@@ -44,7 +46,7 @@ def write_snapshot(directory: str, seq: int, payload: Dict[str, Any], *,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     with open(os.path.join(tmp, "state.json"), "w") as f:
-        f.write(serde.dumps(payload))
+        f.write(serde.dumps(payload, schema=schema))
     with open(os.path.join(tmp, _MARKER), "w") as f:
         f.write("ok")
     if os.path.exists(final):

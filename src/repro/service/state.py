@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import serde
 from repro.core.diameter import INF, is_edge
 from repro.dynamics.engine import POLICIES, ChurnEngine
 from repro.dynamics.scenarios import Event, Trace
@@ -102,6 +103,14 @@ def _bind_state_gauges(state: "ServiceState") -> None:
                    if s.last_snapshot_monotonic is not None else -1.0),
         default=-1.0))
     _UPTIME_GAUGE.set_function(fld(lambda s: s.uptime_s))
+    if state.is_hier:
+        # scrape-time hier gauges (pre-registered in repro.obs; the engine
+        # .set()s them too, but the callback always reads the live value)
+        from repro.obs import HIER_CLUSTERS, HIER_HEADRING_DIAMETER
+        HIER_CLUSTERS.set_function(fld(lambda s: s.engine.n_clusters))
+        HIER_HEADRING_DIAMETER.set_function(
+            fld(lambda s: s.engine.head_inc.diameter()
+                if s.engine.n_clusters > 1 else 0.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +136,7 @@ class ServiceState:
             help="wait to acquire the ServiceState lock (handler threads "
                  "vs re-optimizer contention)")
         self.engine = engine
+        self.is_hier = hasattr(engine, "head_inc")
         self.policy_name = policy_name
         self.snapshot_dir = snapshot_dir
         self.keep_snapshots = keep_snapshots
@@ -168,10 +178,25 @@ class ServiceState:
         The policy's *inline* self-repair cadence is disabled for DGRO: in
         the service the re-optimizer owns adaptation, asynchronously, so an
         ingest never blocks on ring selection.
+
+        ``policy="dgro-hier"`` boots a :class:`repro.hier.HierChurnEngine`
+        instead: cluster-partitioned state, cluster-local maintenance, the
+        re-optimizer then owns the HEAD RING.  ``k_rings`` and
+        ``detect_failures`` do not apply there (hier failures confirm
+        immediately).
         """
+        if policy == "dgro-hier":
+            from repro.hier import HierChurnEngine
+            engine = HierChurnEngine(
+                Trace(n0=world.n0, capacity=world.capacity, dist=world.dist,
+                      seed=world.seed, events=[], name=world.name),
+                rebuild_threshold=rebuild_threshold, seed=seed)
+            return cls(engine, policy_name=policy, snapshot_dir=snapshot_dir,
+                       keep_snapshots=keep_snapshots)
         if policy not in POLICIES:
             raise ValueError(
-                f"unknown policy {policy!r}; options {sorted(POLICIES)}")
+                f"unknown policy {policy!r}; options "
+                f"{sorted(POLICIES) + ['dgro-hier']}")
         kw: Dict = {}
         if policy in ("dgro", "rapid"):
             kw["k_rings"] = k_rings
@@ -203,6 +228,9 @@ class ServiceState:
         wd = p["world"]
         world = Trace(n0=wd["n0"], capacity=wd["capacity"], dist=wd["dist"],
                       seed=wd["seed"], events=[], name=wd.get("name", "world"))
+        if p.get("kind") == "service_snapshot_hier":
+            return cls._restore_hier(world, seq, p, snapshot_dir,
+                                     keep_snapshots)
         c = world.capacity
         pol = POLICIES[p["policy"]]()
         pol.rings = [list(map(int, ring)) for ring in p["policy_rings"]]
@@ -227,6 +255,33 @@ class ServiceState:
                     version=p["version"], events_ingested=p["events_ingested"],
                     snapshot_seq=seq)
         return state
+
+    @classmethod
+    def _restore_hier(cls, world: Trace, seq: int, p: Dict,
+                      snapshot_dir: str, keep_snapshots: int
+                      ) -> "ServiceState":
+        """Recover a hierarchical deployment from a schema-2 snapshot."""
+        from repro.hier import HierChurnEngine, HierConfig, latency_from_spec
+        c = world.capacity
+        alive = np.zeros(c, bool)
+        alive[np.asarray(p["alive"], np.intp)] = True
+        lat = (latency_from_spec(p["latency"])
+               if p.get("latency") is not None else None)
+        engine = HierChurnEngine.restore(
+            world, HierConfig(cluster_size=int(p.get("cluster_size", 0))),
+            slot_cluster=np.asarray(p["slot_cluster"], np.int64),
+            alive=alive,
+            edges=np.asarray(p["edges"], np.intp).reshape(-1, 2),
+            heads={int(k): int(v) for k, v in p["heads"].items()},
+            latency_factor=np.asarray(p["latency_factor"], np.float32),
+            drift_scale=np.asarray(p["drift_scale"], np.float32),
+            lat=lat, clock=p["time"],
+            events_processed=p["events_processed"],
+            rebuild_threshold=p["rebuild_threshold"], seed=p["seed"])
+        return cls(engine, policy_name=p["policy"],
+                   snapshot_dir=snapshot_dir, keep_snapshots=keep_snapshots,
+                   version=p["version"],
+                   events_ingested=p["events_ingested"], snapshot_seq=seq)
 
     @classmethod
     def open(cls, world: Trace, snapshot_dir: Optional[str] = None,
@@ -277,7 +332,11 @@ class ServiceState:
         with self.lock:
             self._count_query("stats")
             inc = self.engine.inc
+            extra = ({"clusters": self.engine.n_clusters,
+                      "reorg": dict(self.engine.reorg_stats)}
+                     if self.is_hier else {})
             return {
+                **extra,
                 "policy": self.policy_name,
                 "version": self.version,
                 "clock": self.engine.clock,
@@ -330,6 +389,8 @@ class ServiceState:
         with self.lock:
             self._count_query("route")
             inc = self.engine.inc
+            if self.is_hier:
+                return self._route_hier(src, dst)
             for name, u in (("src", src), ("dst", dst)):
                 if not 0 <= u < inc.capacity:
                     raise ValueError(f"{name}={u} outside capacity "
@@ -363,9 +424,55 @@ class ServiceState:
                     "hop_bounds": [bound] * hops if hops else None,
                     "version": self.version}
 
+    def _route_hier(self, src: int, dst: int) -> Dict:
+        """Hier branch of :meth:`route` (caller holds the lock): the
+        distance bound composes cluster legs through the head ring; the
+        path is the engine's three-leg greedy walk.  Same response keys,
+        plus ``hops_by_level``."""
+        from repro.routing import record_route
+        eng = self.engine
+        for name, u in (("src", src), ("dst", dst)):
+            if not 0 <= u < eng.capacity:
+                raise ValueError(f"{name}={u} outside capacity "
+                                 f"[0, {eng.capacity})")
+            s = eng.states[eng.cluster_of(u)]
+            if not s.inc.alive[int(np.searchsorted(s.slots, u))]:
+                raise ValueError(f"{name}={u} is not a live node")
+        d, bound = eng.distance_bound(src, dst)
+        reachable = d < float(INF) / 2
+        stale = bound == "lower"
+        path: Optional[List[int]] = None
+        hops: Optional[int] = None
+        stretch: Optional[float] = None
+        hops_by_level: Optional[Dict[str, int]] = None
+        if reachable:
+            walk, lat, levels, outcome = eng.route(src, dst)
+            if outcome == "delivered":
+                path, hops_by_level = walk, levels
+                hops = levels["local"] + levels["head"]
+                stretch = float(lat) / d if d > 0 else 1.0
+        else:
+            outcome = "unreachable"
+        record_route("latency", outcome, hops)
+        return {"src": src, "dst": dst,
+                "distance": float(d) if reachable else None,
+                "reachable": reachable, "stale": stale,
+                "bound": bound, "path": path,
+                "hops": hops, "stretch": stretch,
+                "hops_by_level": hops_by_level,
+                "hop_bounds": [bound] * hops if hops else None,
+                "version": self.version}
+
     def adjacency(self) -> Dict:
         with self.lock:
             self._count_query("adjacency")
+            if self.is_hier:
+                e, wts = self.engine.weighted_edges()
+                live = self.engine.live_ids()
+                return {"nodes": [int(u) for u in live],
+                        "edges": [[int(u), int(v), float(wt)]
+                                  for (u, v), wt in zip(e, wts)],
+                        "n_live": int(live.size), "version": self.version}
             inc = self.engine.inc
             live = inc.live_ids()
             sub = inc.adj[np.ix_(live, live)]
@@ -377,27 +484,59 @@ class ServiceState:
 
     # -- the served Overlay (double buffer A) -----------------------------
 
+    def _head_ring_copy(self) -> "tuple[Overlay, np.ndarray, np.ndarray]":
+        """(head-ring Overlay, active cluster ids, their heads' global
+        ids) from the maintained head graph — the hierarchical stand-ins
+        for the flat path's dense live copies.  Caller holds the lock."""
+        eng = self.engine
+        act = np.array(sorted(c for c, s in eng.states.items()
+                              if s.head >= 0), np.intp)
+        heads = np.array([eng.states[int(c)].head for c in act], np.intp)
+        wl = eng.head_inc.w[np.ix_(act, act)].copy()
+        adjl = eng.head_inc.adj[np.ix_(act, act)].copy()
+        ov = Overlay.from_adjacency(wl, adjl, policy="dgro-hier-head",
+                                    fold_weights=True)
+        return ov, act, heads
+
     def overlay(self) -> "tuple[Overlay, np.ndarray]":
         """(served Overlay over the live sub-fleet, global slot ids).
 
         Rebuilt lazily after mutations; the rebuilt object is immutable, so
-        handing it out of the lock is safe.
+        handing it out of the lock is safe.  Hierarchical deployments
+        serve the HEAD RING here (ids = the heads' global node ids) — the
+        dense whole-fleet overlay is exactly what the hierarchy exists to
+        avoid; per-cluster topologies are reachable via ``/v1/adjacency``.
         """
         with self.lock:
             if self._overlay is None:
-                live = self.engine.inc.live_ids().copy()
-                wl = self.engine.w[np.ix_(live, live)]
-                adjl = self.engine.inc.adj[np.ix_(live, live)]
-                self._overlay = Overlay.from_adjacency(
-                    wl, adjl, policy=self.policy_name, fold_weights=True)
-                self._overlay_live = live
+                if self.is_hier:
+                    ov, _act, heads = self._head_ring_copy()
+                    self._overlay = ov
+                    self._overlay_live = heads
+                else:
+                    live = self.engine.inc.live_ids().copy()
+                    wl = self.engine.w[np.ix_(live, live)]
+                    adjl = self.engine.inc.adj[np.ix_(live, live)]
+                    self._overlay = Overlay.from_adjacency(
+                        wl, adjl, policy=self.policy_name, fold_weights=True)
+                    self._overlay_live = live
             return self._overlay, self._overlay_live
 
     # -- re-optimization (double buffer B) --------------------------------
 
     def capture(self) -> ReoptJob:
-        """Freeze a copy of the live fleet for the background optimizer."""
+        """Freeze a copy of the live fleet for the background optimizer.
+
+        Hierarchical deployments freeze the HEAD RING instead (``live``
+        holds cluster ids): the optimizer then improves inter-cluster
+        latency — cluster-interior maintenance is already local and
+        cheap — and the unchanged ``adapt``/``dqn`` machinery runs on it
+        as on any flat overlay.
+        """
         with self.lock:
+            if self.is_hier:
+                ov, act, _heads = self._head_ring_copy()
+                return ReoptJob(live=act, overlay=ov, version=self.version)
             live = self.engine.inc.live_ids().copy()
             wl = self.engine.w[np.ix_(live, live)].copy()
             adjl = self.engine.inc.adj[np.ix_(live, live)].copy()
@@ -422,14 +561,28 @@ class ServiceState:
             np.asarray(is_edge(new_overlay.adjacency))
             & ~np.asarray(is_edge(job.overlay.adjacency)), 1))
         with self.lock:
-            alive = self.engine.alive
             applied = 0
-            for i, j in new_edges:
-                u, v = int(job.live[i]), int(job.live[j])
-                if alive[u] and alive[v]:
-                    self.engine.inc.add_edge(
-                        u, v, float(new_overlay.adjacency[i, j]))
-                    applied += 1
+            if self.is_hier:
+                # job.live holds CLUSTER ids; land head-ring edges between
+                # clusters that are still active
+                eng = self.engine
+                for i, j in new_edges:
+                    a, b = int(job.live[i]), int(job.live[j])
+                    if (eng.states.get(a) is not None
+                            and eng.states.get(b) is not None
+                            and eng.states[a].head >= 0
+                            and eng.states[b].head >= 0):
+                        eng.head_inc.add_edge(
+                            a, b, float(new_overlay.adjacency[i, j]))
+                        applied += 1
+            else:
+                alive = self.engine.alive
+                for i, j in new_edges:
+                    u, v = int(job.live[i]), int(job.live[j])
+                    if alive[u] and alive[v]:
+                        self.engine.inc.add_edge(
+                            u, v, float(new_overlay.adjacency[i, j]))
+                        applied += 1
             self.version += 1
             self.reopts_completed += 1
             self.events_since_reopt = 0
@@ -448,6 +601,8 @@ class ServiceState:
         pending deletions first so the recorded diameter is exact — the
         restart-consistency invariant the fig17 gate checks."""
         with self.lock:
+            if self.is_hier:
+                return self._snapshot_payload_hier()
             eng = self.engine
             inc = eng.inc
             inc.refresh()
@@ -481,6 +636,42 @@ class ServiceState:
                 "wall_time": _time.time(),
             }
 
+    def _snapshot_payload_hier(self) -> Dict:
+        """Hier snapshot (serde schema 2; caller holds the lock): the
+        slot->cluster map, heads, live ids, and the GLOBAL edge list
+        (intra-cluster + head ring).  Edge weights rehydrate on restore
+        from the latency model and the drift/straggler factors — the
+        restored topology is edge-for-edge the committed one."""
+        from repro.hier import DenseLatency
+        eng = self.engine
+        eng.refresh()
+        return {
+            "kind": "service_snapshot_hier",
+            "time": eng.clock,
+            "events_processed": eng.events_processed,
+            "events_ingested": self.events_ingested,
+            "version": self.version,
+            "policy": self.policy_name,
+            "world": {"n0": eng.trace.n0, "capacity": eng.trace.capacity,
+                      "dist": eng.trace.dist, "seed": eng.trace.seed,
+                      "name": eng.trace.name},
+            # None = dense latency from the world trace (recomputed on
+            # restore); lazy models serialize their (tiny) spec instead
+            "latency": (None if isinstance(eng.lat, DenseLatency)
+                        else eng.lat.to_spec()),
+            "cluster_size": eng.cfg.cluster_size,
+            "slot_cluster": [int(c) for c in eng._slot_cluster],
+            "heads": {str(c): int(s.head) for c, s in eng.states.items()},
+            "alive": [int(u) for u in eng.live_ids()],
+            "edges": [[int(u), int(v)] for u, v in eng.edge_list()],
+            "latency_factor": [float(x) for x in eng.latency_factor],
+            "drift_scale": [float(x) for x in eng.drift_scale],
+            "diameter": eng.diameter(),
+            "rebuild_threshold": eng.rebuild_threshold,
+            "seed": 0,
+            "wall_time": _time.time(),
+        }
+
     def write_snapshot(self, reason: str = "periodic") -> Optional[str]:
         """Atomic-commit a snapshot (no-op without a snapshot dir)."""
         if not self.snapshot_dir:
@@ -492,8 +683,9 @@ class ServiceState:
                 self.snapshot_seq += 1
                 seq = self.snapshot_seq
                 self.events_since_snapshot = 0
-            path = snaps.write_snapshot(self.snapshot_dir, seq, payload,
-                                        keep=self.keep_snapshots)
+            path = snaps.write_snapshot(
+                self.snapshot_dir, seq, payload, keep=self.keep_snapshots,
+                schema=serde.HIER_SCHEMA if self.is_hier else None)
         self.last_snapshot_monotonic = _time.monotonic()
         _SNAPSHOTS.labels(reason=reason).inc()
         _log.info(kv("snapshot.committed", seq=seq, reason=reason,

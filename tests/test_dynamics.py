@@ -174,8 +174,8 @@ def test_trace_json_roundtrip_and_determinism():
         assert rt.events == t1.events and rt.n0 == t1.n0
         assert (rt.capacity, rt.dist, rt.seed) == (
             t1.capacity, t1.dist, t1.seed)
-        assert all(e.kind in ("join", "leave", "fail", "latency_drift",
-                              "straggler") for e in t1.events), name
+        from repro.dynamics.scenarios import EVENT_KINDS
+        assert all(e.kind in EVENT_KINDS for e in t1.events), name
 
 
 def test_event_kind_validated():

@@ -1,0 +1,294 @@
+"""Tests for ``repro.hier``: the hierarchical overlay stack.
+
+Covers the topology protocol (both implementations), schema-2 serde next
+to byte-identical schema-1 flat payloads, small-N exactness of the
+hierarchical bounds against materialized exact APSP, the
+:class:`~repro.hier.HierChurnEngine` under cluster split/merge and
+correlated regional failure, trace JSON round-trips with the ``peer``
+field, and the hierarchical service integration (fresh -> ingest ->
+route -> snapshot -> restore).  A slow-marked N=10^5 smoke exercises the
+lazy-latency scale path (excluded from tier-1 by the ``slow`` marker).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import overlay
+from repro.core.topology import make_latency
+from repro.dynamics.scenarios import (Event, Trace, cluster_split_merge,
+                                      regional_failure)
+from repro.hier import (DenseLatency, HierChurnEngine, HierConfig,
+                        HierarchicalOverlay, build_hier, synthetic_geo)
+from repro.overlay import Overlay, Topology, from_topology_json
+
+N = 96
+
+
+def _hier(n=N, seed=0, dist="bitnode", **cfg):
+    w = make_latency(dist, n, seed=seed + 2)
+    return w, build_hier(DenseLatency(w),
+                         HierConfig(**cfg) if cfg else None, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# topology protocol + registry
+# ---------------------------------------------------------------------------
+
+def test_both_implementations_satisfy_topology_protocol():
+    w, hov = _hier()
+    flat = overlay.build("dgro", w, seed=1)
+    assert isinstance(flat, Topology)
+    assert isinstance(hov, Topology)
+    assert overlay.get_builder("dgro").kind == "flat"
+    assert overlay.get_builder("dgro-hier").kind == "hier"
+    assert "dgro-hier" in overlay.builders()
+
+
+def test_registry_builds_hier_from_dense_matrix():
+    w = make_latency("uniform", N, seed=4)
+    hov = overlay.build("dgro-hier", w, seed=1)
+    assert isinstance(hov, HierarchicalOverlay)
+    assert hov.n == N and hov.n_clusters >= 2
+    e = hov.edge_list()
+    assert e.ndim == 2 and e.shape[1] == 2
+    assert np.all(e[:, 0] < e[:, 1])                   # unique, u < v
+    assert np.array_equal(e, np.unique(np.sort(e, axis=1), axis=0))
+
+
+# ---------------------------------------------------------------------------
+# bound validity at small N (exact APSP oracle via materialize)
+# ---------------------------------------------------------------------------
+
+def test_hier_bounds_match_materialized_exact_apsp():
+    _, hov = _hier()
+    mat = hov.materialize()
+    apsp = np.asarray(mat.distances(), np.float64)
+    rng = np.random.default_rng(7)
+    us = rng.integers(0, N, size=128)
+    vs = rng.integers(0, N, size=128)
+    served, stamp = hov.distance_bound_pairs(us, vs)
+    assert stamp == "exact"
+    # heads are the only gateways, so the three-leg composition IS the
+    # exact APSP of the hier edge set (float32 round-off only)
+    np.testing.assert_allclose(served, apsp[us, vs], rtol=1e-4, atol=1e-3)
+    d, ds = hov.diameter_bound("exact")
+    assert ds == "exact"
+    assert d == pytest.approx(float(mat.diameter()), rel=1e-4)
+    ub, us_ = hov.diameter_bound("ecc")
+    assert us_ == "upper"
+    assert ub >= d - 1e-3                              # never an underestimate
+    with pytest.raises(ValueError):
+        hov.diameter_bound("nope")
+
+
+def test_hier_diameter_within_1_5x_flat_dgro():
+    n = 256
+    w = make_latency("bitnode", n, seed=2)
+    flat_d = float(overlay.build("dgro", w, seed=0).diameter())
+    hov = build_hier(DenseLatency(w), HierConfig(k_local=12), seed=0)
+    hd, stamp = hov.diameter_bound("exact")
+    assert stamp == "exact"
+    assert hd <= 1.5 * flat_d
+
+
+def test_subset_survives_head_death():
+    _, hov = _hier()
+    alive = np.ones(N, bool)
+    alive[int(hov.heads[0])] = False                   # kill a gateway
+    alive[:5] = False
+    sub = hov.subset(alive)
+    assert sub.n == int(alive.sum())
+    assert isinstance(sub, HierarchicalOverlay)
+    mat = sub.materialize()
+    d, ds = sub.diameter_bound("exact")
+    assert ds == "exact"
+    assert d == pytest.approx(float(mat.diameter()), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# serde: schema 2 next to byte-identical schema 1
+# ---------------------------------------------------------------------------
+
+def test_hier_serde_schema2_round_trip():
+    _, hov = _hier()
+    s = hov.to_json()
+    assert json.loads(s)["schema"] == 2
+    rt = HierarchicalOverlay.from_json(s)
+    assert rt.equals(hov)
+    assert rt.to_json() == s                           # byte-identical
+    # the flat loader refuses schema 2; the protocol dispatcher accepts it
+    with pytest.raises(ValueError):
+        Overlay.from_json(s)
+    via = from_topology_json(s)
+    assert isinstance(via, HierarchicalOverlay) and via.equals(hov)
+
+
+def test_flat_serde_stays_schema1_byte_identical():
+    w = make_latency("uniform", 48, seed=3)
+    ov = overlay.build("dgro", w, seed=1)
+    s = ov.to_json()
+    assert json.loads(s).get("schema", 1) == 1
+    rt = Overlay.from_json(s)
+    assert rt.to_json() == s
+    assert float(rt.diameter()) == float(ov.diameter())
+    via = from_topology_json(s)
+    assert isinstance(via, Overlay)
+    assert via.to_json() == s
+
+
+def test_trace_json_round_trips_cluster_events():
+    trace = cluster_split_merge(n0=48, seed=5)
+    rt = Trace.from_json(trace.to_json())
+    assert rt.to_json() == trace.to_json()
+    kinds = [e.kind for e in rt.events]
+    assert "cluster_split" in kinds and "cluster_merge" in kinds
+    merge = next(e for e in rt.events if e.kind == "cluster_merge")
+    assert merge.peer >= 0 and merge.peer != merge.node
+    # node-level events stay byte-identical to the pre-cluster format:
+    # no "peer" key in their serialized form
+    node_ev = Event(time=1.0, kind="join", node=3)
+    assert "peer" not in node_ev.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# HierChurnEngine
+# ---------------------------------------------------------------------------
+
+def test_engine_cluster_split_and_merge():
+    trace = cluster_split_merge(n0=N, seed=3)
+    eng = HierChurnEngine(trace, seed=0)
+    res = eng.run()
+    assert res.policy == "dgro-hier"
+    assert eng.reorg_stats["splits"] >= 1
+    assert eng.reorg_stats["merges"] >= 1
+    assert np.isfinite(res.final_diameter) and res.final_diameter > 0
+    assert eng.events_processed == len(trace.events)
+    with pytest.raises(RuntimeError):
+        eng.run()                                      # one-shot replay
+
+
+def test_engine_regional_failure_diameter_is_valid_lower_bound():
+    trace = regional_failure(n0=51, seed=2)
+    eng = HierChurnEngine(trace, seed=0)
+    for e in sorted(trace.events, key=lambda e: e.time):
+        eng.process(e)
+    d_maint = eng.diameter()                 # maintained (exact-or-lower)
+    d_exact = eng.diameter(exact=True)       # refreshes every level first
+    assert d_maint <= d_exact + 1e-3
+    assert np.isfinite(d_exact) and d_exact > 0
+    # against a from-scratch APSP oracle over the engine's served edges
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import dijkstra
+    edges, wts = eng.weighted_edges()
+    cap = eng.capacity
+    m = np.zeros((cap, cap))
+    m[edges[:, 0], edges[:, 1]] = wts
+    m[edges[:, 1], edges[:, 0]] = wts
+    live = eng.live_ids()
+    full = dijkstra(csr_matrix(m), directed=False, indices=live)[:, live]
+    assert d_exact == pytest.approx(float(full[np.isfinite(full)].max()),
+                                    rel=1e-4)
+
+
+def test_engine_per_node_bounds_and_routing_after_churn():
+    trace = cluster_split_merge(n0=N, seed=1)
+    eng = HierChurnEngine(trace, seed=0)
+    for e in sorted(trace.events, key=lambda e: e.time):
+        eng.process(e)
+    eng.refresh()
+    live = eng.live_ids()
+    src, dst = int(live[0]), int(live[-1])
+    d, stamp = eng.distance_bound(src, dst)
+    assert stamp == "exact" and np.isfinite(d)
+    path, lat, levels, outcome = eng.route(src, dst)
+    assert outcome == "delivered"
+    assert path[0] == src and path[-1] == dst
+    assert lat == pytest.approx(d, rel=1e-4)           # latency-potential walk
+    assert levels["local"] + levels["head"] == len(path) - 1
+
+
+def test_engine_rejects_stale_events():
+    trace = cluster_split_merge(n0=48, seed=4)
+    eng = HierChurnEngine(trace, seed=0)
+    eng.process(Event(time=10.0, kind="join", node=48))
+    with pytest.raises(ValueError):
+        eng.process(Event(time=5.0, kind="leave", node=0))
+
+
+# ---------------------------------------------------------------------------
+# service integration
+# ---------------------------------------------------------------------------
+
+def test_service_hier_fresh_ingest_route_snapshot_restore(tmp_path):
+    from repro.service.state import ServiceState
+
+    world = Trace(n0=64, capacity=80, dist="bitnode", seed=3, events=[],
+                  name="svc-hier")
+    st = ServiceState.fresh(world, policy="dgro-hier",
+                            snapshot_dir=str(tmp_path))
+    stats = st.stats()
+    assert stats["policy"] == "dgro-hier"
+    assert stats["clusters"] >= 2
+    res = st.ingest([
+        Event(time=1.0, kind="join", node=64),
+        Event(time=2.0, kind="leave", node=1),
+        Event(time=3.0, kind="cluster_split", node=0),
+        Event(time=4.0, kind="cluster_merge", node=1, peer=2),
+    ])
+    assert res["applied"] == 4, res
+    live = np.asarray(st.adjacency()["nodes"])
+    r = st.route(int(live[0]), int(live[-1]))
+    assert r["reachable"] and r["hops"] >= 1
+    assert r["hops_by_level"]["local"] + r["hops_by_level"]["head"] == r["hops"]
+    assert r["stretch"] >= 1 - 1e-5
+
+    path = st.write_snapshot()
+    assert path is not None
+    raw = json.loads(open(f"{path}/state.json").read())
+    assert raw["schema"] == 2
+    assert raw["kind"] == "service_snapshot_hier"
+
+    d0 = st.diameter(exact=True)["diameter"]
+    rt = ServiceState.restore(str(tmp_path))
+    assert rt.stats()["clusters"] == st.stats()["clusters"]
+    assert rt.stats()["n_live"] == st.stats()["n_live"]
+    assert rt.diameter(exact=True)["diameter"] == pytest.approx(d0, rel=1e-5)
+    a0 = st.adjacency()
+    a1 = rt.adjacency()
+    assert a0["nodes"] == a1["nodes"]
+    assert sorted(map(tuple, a0["edges"])) == sorted(map(tuple, a1["edges"]))
+
+
+def test_hier_gauges_track_engine_state():
+    from repro.obs import HIER_CLUSTERS
+
+    # a prior ServiceState in this process may have left a (now-dead)
+    # scrape callback bound; drop it so the engine's direct .set() shows
+    HIER_CLUSTERS.set_function(None)
+    trace = cluster_split_merge(n0=48, seed=6)
+    eng = HierChurnEngine(trace, seed=0)
+    assert HIER_CLUSTERS.value == eng.n_clusters > 0
+
+
+# ---------------------------------------------------------------------------
+# scale smoke (slow: excluded from tier-1 by the marker)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_hier_scale_smoke_100k():
+    n = 100_000
+    lat = synthetic_geo(n, seed=0)
+    hov = build_hier(lat, seed=0)
+    assert hov.n == n and hov.n_clusters >= 2
+    d, stamp = hov.diameter_bound("ecc")
+    assert stamp == "upper" and np.isfinite(d) and d > 0
+    trace = Trace(n0=n, capacity=n + 8, dist="bitnode", seed=0, events=[],
+                  name="scale-smoke")
+    eng = HierChurnEngine(trace, lat=synthetic_geo(n + 8, seed=0), seed=0)
+    t = 0.0
+    for i in range(10):
+        t += 1.0
+        eng.process(Event(time=t, kind="join", node=n + i % 8)
+                    if i % 2 else Event(time=t, kind="leave", node=i))
+    assert eng.events_processed == 10

@@ -66,7 +66,7 @@ def test_serde_accepts_legacy_payload_without_schema():
 
 
 def test_serde_rejects_future_and_malformed_schema():
-    future = json.dumps({"schema": serde.SCHEMA_VERSION + 1})
+    future = json.dumps({"schema": serde.MAX_SCHEMA + 1})
     with pytest.raises(serde.SchemaError, match="only understands"):
         serde.loads(future, what="t")
     with pytest.raises(serde.SchemaError):
@@ -87,7 +87,7 @@ def test_overlay_and_trace_json_carry_schema():
     rt2 = Trace.from_json(tr.to_json())
     assert rt2.events == tr.events
 
-    future = dict(json.loads(tr.to_json()), schema=serde.SCHEMA_VERSION + 1)
+    future = dict(json.loads(tr.to_json()), schema=serde.MAX_SCHEMA + 1)
     with pytest.raises(serde.SchemaError):
         Trace.from_json(json.dumps(future))
 

@@ -8,6 +8,12 @@ was streamed (a fresh process, so absolute values are exact), and checks
 the daemon exits cleanly on ``POST /v1/shutdown``.
 
     PYTHONPATH=src python tools/service_smoke.py [--events 50] [--n0 32]
+    PYTHONPATH=src python tools/service_smoke.py --policy dgro-hier --n0 96
+
+With ``--policy dgro-hier`` the daemon serves a hierarchical overlay:
+the same endpoint contract is asserted, plus the hier gauges
+(``repro_hier_clusters``, ``repro_hier_headring_diameter``) and the
+per-level ``repro_hier_route_hops`` histogram must appear in the scrape.
 
 Run under both ``JAX_PLATFORMS=cpu`` and the default platform in CI.
 """
@@ -31,8 +37,12 @@ def main() -> None:
     ap.add_argument("--events", type=int, default=50)
     ap.add_argument("--n0", type=int, default=32)
     ap.add_argument("--dist", default="bitnode")
+    ap.add_argument("--policy", default="dgro",
+                    help="overlay policy the daemon serves "
+                         "(e.g. dgro, dgro-hier)")
     ap.add_argument("--timeout", type=float, default=120.0)
     args = ap.parse_args()
+    hier = args.policy == "dgro-hier"
 
     # a trace with >= the requested number of events (rates scale with count)
     trace = poisson_churn(n0=args.n0, dist=args.dist, seed=1,
@@ -47,7 +57,8 @@ def main() -> None:
     proc = subprocess.Popen(
         [sys.executable, "-m", "repro.service",
          "--n0", str(args.n0), "--capacity", str(trace.capacity),
-         "--dist", args.dist, "--port", "0", "--snapshot-dir", snapdir,
+         "--dist", args.dist, "--policy", args.policy,
+         "--port", "0", "--snapshot-dir", snapdir,
          "--reopt-every", "16", "--snapshot-every", "25"],
         stdout=subprocess.PIPE, text=True,
         env={**os.environ, "PYTHONPATH": "src"})
@@ -71,6 +82,9 @@ def main() -> None:
         assert st["events_ingested"] == len(events), st
         assert st["n_live"] >= 4
         assert st["distances_are"] in ("exact", "lower-bound")
+        if hier:
+            assert st["clusters"] > 0, st
+            assert st["reorg"]["head_rebuilds"] >= 0, st
 
         nodes = c.adjacency()["nodes"]
         assert len(nodes) == st["n_live"]
@@ -84,6 +98,9 @@ def main() -> None:
             # served distance is exact or a lower bound -> stretch >= 1
             assert r["stretch"] >= 1 - 1e-5, r
             assert r["hop_bounds"] == [r["bound"]] * r["hops"], r
+            if hier:
+                levels = r["hops_by_level"]
+                assert levels["local"] + levels["head"] == r["hops"], r
         else:
             assert r["hops"] is None and r["stretch"] is None, r
 
@@ -105,12 +122,25 @@ def main() -> None:
         assert reqs[post_key] == (len(events) + 9) // 10, reqs
         assert scraped["repro_service_n_live"][()] == st["n_live"]
         # the shared routing instruments: exactly one /v1/route was served
+        # (the hier engine additionally counts its internal walk under
+        # policy="hier-latency", so hier scrapes carry two series)
         route_reqs = scraped["repro_route_requests_total"]
-        assert sum(route_reqs.values()) == 1, route_reqs
+        assert sum(route_reqs.values()) == (2 if hier else 1), route_reqs
         if r["path"] is not None:
             key = (("outcome", "delivered"), ("policy", "latency"))
             assert route_reqs[key] == 1, route_reqs
             assert scraped["repro_route_hops_count"][()] == 1, scraped
+
+        if hier:
+            # the hierarchical instruments must land in the same scrape:
+            # the cluster/head-ring gauges are bound to live engine state,
+            # and the delivered route above observed per-level hops
+            assert scraped["repro_hier_clusters"][()] == st["clusters"] > 0, \
+                scraped.get("repro_hier_clusters")
+            assert scraped["repro_hier_headring_diameter"][()] >= 0, scraped
+            hier_hops = scraped["repro_hier_route_hops_count"]
+            local_key = (("level", "local"),)
+            assert hier_hops.get(local_key, 0) >= 1, hier_hops
 
         # the APSP engine instruments: the forced re-optimization scored
         # candidates through batcheval, so the per-phase evaluation spans
